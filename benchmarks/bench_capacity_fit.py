@@ -1,0 +1,83 @@
+"""Paper figs. 16/17/18: oversubscription vs hit rate, Gompertz fits.
+
+Generates (O, R_hit) points from the simulator across domains x block sizes,
+fits R(O) = a*exp(-b*exp(-c*O)) per volume class, prints fitted params.
+These fits regenerate capacity.DEFAULT_FITS.
+"""
+import numpy as np
+
+from repro.core.access import LaunchConfig
+from repro.core.cachesim import simulate_l2_waves
+from repro.core.footprint import footprint_bytes
+from repro.core.isets import count_union
+from repro.core.perfmodel import estimate_dram
+from repro.core.capacity import CapacityModel, HitRateFit, gompertz
+from repro.core.specs import star_stencil_3d
+from repro.core.wave import build_wave_sets
+
+from .common import SMALL_A100, emit
+
+PERFECT = CapacityModel(
+    {
+        "l1_loads": HitRateFit(1.0, 0.0, -1.0),
+        "l2_over_y": HitRateFit(1.0, 0.0, -1.0),  # assume full reuse
+        "l2_over_z": HitRateFit(1.0, 0.0, -1.0),
+        "l2_store": HitRateFit(1.0, 0.0, -1.0),
+    }
+)
+
+
+def collect_points():
+    """(oversubscription, observed z-layer hit rate) samples."""
+    pts = []
+    for dom in [(32, 48, 64), (32, 64, 96), (32, 96, 128), (24, 128, 160),
+                (24, 160, 192)]:
+        for blk in [(32, 4, 4), (64, 4, 2), (128, 2, 2), (32, 8, 2)]:
+            spec = star_stencil_3d(r=4, domain=dom)
+            lc = LaunchConfig(block=blk)
+            try:
+                d = estimate_dram(spec, lc, SMALL_A100, PERFECT)
+            except ValueError:
+                continue
+            bd = d["breakdown"]
+            v_ov = bd.detail["v_ov_z_per_lup"]
+            if v_ov < 1.0:
+                continue
+            ws = build_wave_sets(spec, lc, SMALL_A100.n_sms)
+            alloc_z = footprint_bytes(spec.accesses, ws.z_layer, 128)
+            o = alloc_z / SMALL_A100.l2_bytes
+            sim = simulate_l2_waves(spec, lc, SMALL_A100)
+            # observed hit rate in the overlap volume: (comp - meas)/overlap
+            comp = bd.compulsory
+            meas = sim["dram_load_bytes_per_lup"]
+            saved = max(0.0, comp + bd.detail["v_ov_y_per_lup"] * 0 - meas)
+            r = min(1.0, saved / max(v_ov, 1e-9))
+            pts.append((o, r))
+    return pts
+
+
+def main():
+    pts = collect_points()
+    for o, r in pts:
+        emit("capacity_fit/z_layer/point", 0.0, f"O={o:.2f};Rhit={r:.3f}")
+    if len(pts) >= 4:
+        try:
+            from scipy.optimize import curve_fit
+
+            xs = np.array([p[0] for p in pts])
+            ys = np.array([p[1] for p in pts])
+            g = lambda o, a, b, c: a * np.exp(-b * np.exp(np.minimum(-c * o, 50)))
+            (a, b, c), _ = curve_fit(
+                g, xs, ys, p0=[1.0, 0.004, -2.4],
+                bounds=([0.3, 1e-5, -8.0], [1.0, 2.0, -0.05]), maxfev=20000,
+            )
+            emit("capacity_fit/z_layer/gompertz", 0.0, f"a={a:.3f};b={b:.4f};c={c:.3f}")
+            # fit must be decreasing in O over the observed range
+            lo, hi = gompertz(xs.min(), a, b, c), gompertz(xs.max(), a, b, c)
+            emit("capacity_fit/z_layer/range", 0.0, f"R({xs.min():.2f})={lo:.2f};R({xs.max():.2f})={hi:.2f}")
+        except Exception as e:  # pragma: no cover
+            emit("capacity_fit/z_layer/gompertz", 0.0, f"fit_failed={e!r}")
+
+
+if __name__ == "__main__":
+    main()

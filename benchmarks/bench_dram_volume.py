@@ -1,0 +1,59 @@
+"""Paper figs. 19-22: predicted vs measured DRAM load volumes + breakdown.
+
+Prediction: wave model + layer-condition reuse + capacity fits.  Measurement:
+LRU L2 simulator over warm-up + measured waves.  Also reports the fig-20 gray
+markers effect: prediction quality with overlap-reuse modeling disabled.
+"""
+from repro.core.capacity import CapacityModel, HitRateFit
+from repro.core.cachesim import simulate_l2_waves
+from repro.core.perfmodel import estimate_gpu
+from repro.core.specs import lbm_d3q15, star_stencil_3d
+
+from .common import SMALL_A100, configs_512, emit, rel_err, timed
+
+NO_REUSE = CapacityModel(
+    {
+        "l1_loads": HitRateFit(1.0, 0.006, -1.6),
+        "l2_over_y": HitRateFit(0.0, 0.0, -1.0),   # reuse modeling off
+        "l2_over_z": HitRateFit(0.0, 0.0, -1.0),
+        "l2_store": HitRateFit(0.97, 0.01, -0.9),
+    }
+)
+
+
+def run_app(name, spec, configs):
+    errs, errs_noreuse = [], []
+    for lc in configs:
+        est, us_e = timed(estimate_gpu, spec, lc, SMALL_A100)
+        est_nr = estimate_gpu(spec, lc, SMALL_A100, NO_REUSE)
+        sim, us_s = timed(simulate_l2_waves, spec, lc, SMALL_A100)
+        pred = est.dram_load_per_lup
+        meas = sim["dram_load_bytes_per_lup"]
+        e = rel_err(pred, meas)
+        errs.append(e)
+        errs_noreuse.append(rel_err(est_nr.dram_load_per_lup, meas))
+        b, f = lc.block, lc.folding
+        bd = est.dram_breakdown
+        emit(
+            f"dram_volume/{name}/{b[0]}x{b[1]}x{b[2]}_f{f[2]}",
+            us_s,
+            f"pred={pred:.1f}B;meas={meas:.1f}B;relerr={e:.3f};"
+            f"comp={bd.compulsory:.1f};savedY={bd.saved_y:.1f};savedZ={bd.saved_z:.1f}",
+        )
+    errs.sort()
+    errs_noreuse.sort()
+    emit(
+        f"dram_volume/{name}/summary",
+        0.0,
+        f"mean_relerr={sum(errs)/len(errs):.3f};"
+        f"mean_relerr_no_reuse_model={sum(errs_noreuse)/len(errs_noreuse):.3f}",
+    )
+
+
+def main():
+    run_app("stencil3d25", star_stencil_3d(r=4, domain=(48, 96, 128)), configs_512())
+    run_app("lbm", lbm_d3q15(domain=(24, 48, 64)), configs_512()[:8])
+
+
+if __name__ == "__main__":
+    main()

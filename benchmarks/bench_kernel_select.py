@@ -1,0 +1,53 @@
+"""Paper fig. 1 workflow on TPU: analytic config selection for the Pallas
+kernels (the autotuning replacement), plus correctness spot-check of the
+selected kernel against the jnp oracle in interpret mode."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.tpu_adapt import estimate_pallas
+from repro.kernels.flash_attention.generator import rank_configs as fa_rank
+from repro.kernels.lbm_d3q15.generator import rank_configs as lbm_rank
+from repro.kernels.matmul.generator import rank_configs as mm_rank
+from repro.kernels.stencil3d25.generator import rank_configs as st_rank
+
+from .common import emit, timed
+
+
+def main():
+    # stencil: paper domain; selection must flip ring -> ytile as planes grow
+    for dom in [(512, 512, 640), (256, 2048, 2048)]:
+        ranked, us = timed(st_rank, 4, dom, elem_bytes=8)
+        best = ranked[0]
+        emit(
+            f"kernel_select/stencil/{dom[0]}x{dom[1]}x{dom[2]}",
+            us,
+            f"best={best.config};B_per_pt={best.estimate.bytes_per_work:.1f};"
+            f"lim={best.estimate.limiter};n_cands={len(ranked)}",
+        )
+    ranked, us = timed(lbm_rank, (256, 256, 256), elem_bytes=8)
+    emit("kernel_select/lbm/256cube", us,
+         f"best={ranked[0].config};B_per_lup={ranked[0].estimate.bytes_per_work:.0f}")
+    ranked, us = timed(mm_rank, 8192, 8192, 8192, elem_bytes=2)
+    emit("kernel_select/matmul/8k", us,
+         f"best={ranked[0].config};t={ranked[0].estimate.total_time*1e3:.2f}ms;"
+         f"lim={ranked[0].estimate.limiter}")
+    ranked, us = timed(fa_rank, 8, 32, 8, 4096, 4096, 128)
+    emit("kernel_select/flash/4k", us,
+         f"best={ranked[0].config};t={ranked[0].estimate.total_time*1e3:.2f}ms")
+
+    # correctness of a selected stencil config (small domain, interpret mode)
+    from repro.kernels.stencil3d25.ops import star_stencil
+    from repro.kernels.stencil3d25.ref import pad_input, star_stencil_ref, star_weights
+
+    src = jax.random.normal(jax.random.PRNGKey(0), (6, 16, 32))
+    w = star_weights(2)
+    out, us = timed(star_stencil, src, w, 2)
+    ref = star_stencil_ref(pad_input(src, 2), w, 2)
+    ok = bool(np.allclose(np.asarray(out), np.asarray(ref), atol=1e-5))
+    emit("kernel_select/stencil_selected_correct", us, f"allclose={ok}")
+    assert ok
+
+
+if __name__ == "__main__":
+    main()

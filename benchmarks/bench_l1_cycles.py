@@ -1,0 +1,37 @@
+"""Paper fig. 12: L1 cache cycles per lattice update across block sizes.
+
+The estimator's wavefront count (bank-conflict visitor over half warps) is
+the quantity the paper validates against l1tex__data_pipe_lsu_wavefronts.
+Derived column: cycles/LUP for the stencil, and the thread-folding win.
+"""
+from repro.core.access import LaunchConfig
+from repro.core.gridwalk import walk_block_l1
+from repro.core.specs import lbm_d3q15, star_stencil_3d
+
+from .common import BLOCKS_512, emit, timed
+
+
+def main():
+    spec = star_stencil_3d(r=4, domain=(64, 96, 128))
+    lbm = lbm_d3q15(domain=(32, 48, 64))
+    rows = []
+    for blk in BLOCKS_512:
+        lc = LaunchConfig(block=blk)
+        cyc, us = timed(walk_block_l1, spec, lc)
+        rows.append((blk, cyc))
+        emit(f"l1_cycles/stencil/{blk[0]}x{blk[1]}x{blk[2]}", us, f"{cyc:.3f}cyc/LUP")
+    # thread folding lowers L1 cycles (fig 12's 2y/2z points)
+    base = walk_block_l1(spec, LaunchConfig(block=(64, 4, 2)))
+    fold = walk_block_l1(spec, LaunchConfig(block=(64, 4, 2), folding=(1, 1, 2)))
+    emit("l1_cycles/folding_win", 0.0, f"plain={base:.3f};2z={fold:.3f}")
+    assert fold <= base * 1.01
+    # narrow blocks must show bank pressure (wide >= 16 is conflict-free)
+    wide = min(c for b, c in rows if b[0] >= 16)
+    narrow = max(c for b, c in rows if b[0] <= 2)
+    emit("l1_cycles/narrow_penalty", 0.0, f"wide={wide:.2f};narrow={narrow:.2f}")
+    cyc, us = timed(walk_block_l1, lbm, LaunchConfig(block=(64, 4, 2)))
+    emit("l1_cycles/lbm/64x4x2", us, f"{cyc:.3f}cyc/LUP")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,59 @@
+"""Paper figs. 13/14/15: predicted vs measured L2->L1 data volume.
+
+Prediction: block-footprint estimator + L1 capacity model.  Measurement:
+the LRU sector-cache simulator (the hardware-counter stand-in).  Derived:
+mean/max relative error over the config set and the fig.-15 style breakdown
+for selected shapes.
+"""
+from repro.core.cachesim import simulate_l1_block
+from repro.core.perfmodel import estimate_gpu
+from repro.core.specs import lbm_d3q15, star_stencil_3d
+
+from .common import SMALL_A100, configs_512, emit, rel_err, timed
+
+
+def run_app(name, spec, configs):
+    errs = []
+    for lc in configs:
+        est, us_e = timed(estimate_gpu, spec, lc, SMALL_A100)
+        sim, us_s = timed(simulate_l1_block, spec, lc, SMALL_A100)
+        pred = est.l2_l1_load_per_lup
+        meas = sim["l2_to_l1_load_bytes_per_lup"]
+        e = rel_err(pred, meas)
+        errs.append(e)
+        b, f = lc.block, lc.folding
+        emit(
+            f"l2_volume/{name}/{b[0]}x{b[1]}x{b[2]}_f{f[2]}",
+            us_e,
+            f"pred={pred:.1f}B;meas={meas:.1f}B;relerr={e:.3f}",
+        )
+    errs.sort()
+    emit(
+        f"l2_volume/{name}/summary",
+        0.0,
+        f"mean_relerr={sum(errs)/len(errs):.3f};p90={errs[int(0.9*len(errs))]:.3f}",
+    )
+    return errs
+
+
+def main():
+    stencil = star_stencil_3d(r=4, domain=(48, 96, 128))
+    run_app("stencil3d25", stencil, configs_512())
+    lbm = lbm_d3q15(domain=(24, 48, 64))
+    run_app("lbm", lbm, configs_512()[:12])
+    # fig 15 breakdown for selected shapes
+    for blk in [(64, 4, 2), (2, 256, 1), (16, 2, 16)]:
+        from repro.core.access import LaunchConfig
+
+        est = estimate_gpu(stencil, LaunchConfig(block=blk), SMALL_A100)
+        bd = est.l2_breakdown
+        emit(
+            f"l2_volume/breakdown/{blk[0]}x{blk[1]}x{blk[2]}",
+            0.0,
+            f"comp={bd.compulsory:.1f};cap={bd.capacity:.1f};"
+            f"upper={bd.detail['upper_per_lup']:.1f};rhit={bd.detail['r_hit']:.2f}",
+        )
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,49 @@
+"""Paper fig. 23 / §5.7: the layer-condition phenomenon on GPUs.
+
+Domain series with constant total size but growing quadratic XY plane; for
+each thread-block z-extent the DRAM volume transitions from near-minimal
+(z-layer reuse hits) to the wave-shape-only level once the z-layer volume
+exceeds the (scaled) L2.  Estimates tracked against the LRU simulator.
+"""
+from repro.core.access import LaunchConfig
+from repro.core.cachesim import simulate_l2_waves
+from repro.core.perfmodel import estimate_gpu
+from repro.core.specs import star_stencil_3d
+
+from .common import SMALL_A100, emit, rel_err, timed
+
+# constant total ~= 786k points, XY plane grows  (scaled fig. 23 series)
+TOTAL = 48 * 128 * 128
+XYS = [64, 96, 128, 160, 192]
+BLOCKS = [(256, 2, 1), (64, 2, 4), (32, 2, 8)]
+
+
+def main():
+    for blk in BLOCKS:
+        series = []
+        for xy in XYS:
+            z = max(8, TOTAL // (xy * xy))
+            spec = star_stencil_3d(r=4, domain=(z, xy, xy))
+            lc = LaunchConfig(block=blk)
+            est, us = timed(estimate_gpu, spec, lc, SMALL_A100)
+            sim = simulate_l2_waves(spec, lc, SMALL_A100)
+            pred = est.dram_load_per_lup
+            meas = sim["dram_load_bytes_per_lup"]
+            series.append((xy, pred, meas))
+            emit(
+                f"layer_condition/{blk[0]}x{blk[1]}x{blk[2]}/xy{xy}",
+                us,
+                f"pred={pred:.1f}B;meas={meas:.1f}B;relerr={rel_err(pred, meas):.3f}",
+            )
+        # the transition: volume at the largest plane exceeds the smallest
+        lo = min(p for _, p, _ in series)
+        hi = series[-1][1]
+        emit(
+            f"layer_condition/{blk[0]}x{blk[1]}x{blk[2]}/transition",
+            0.0,
+            f"min_pred={lo:.1f}B;large_plane_pred={hi:.1f}B;ratio={hi/max(lo,1e-9):.2f}",
+        )
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,52 @@
+"""§Roofline: the full (arch x shape x mesh) table from the dry-run records.
+
+Reads experiments/dryrun/*.json (produced by repro.launch.dryrun) and prints
+the three roofline terms, dominant bottleneck, useful-FLOPs ratio, roofline
+fraction, and per-device memory for every cell.
+"""
+import glob
+import json
+import os
+
+from .common import emit
+
+DRYRUN_DIR = os.environ.get("DRYRUN_DIR", "experiments/dryrun")
+
+
+def load_rows():
+    rows = []
+    for path in sorted(glob.glob(os.path.join(DRYRUN_DIR, "*.json"))):
+        with open(path) as f:
+            rows.append(json.load(f))
+    return rows
+
+
+def main():
+    rows = load_rows()
+    if not rows:
+        emit("roofline/missing", 0.0, f"no dry-run records in {DRYRUN_DIR}")
+        return
+    for r in rows:
+        name = f"{r['arch']}/{r['shape']}/{r['mesh']}"
+        emit(
+            f"roofline/{name}",
+            r.get("compile_s", 0.0) * 1e6,
+            f"t_comp={r['t_compute_s']:.3f}s;t_mem={r['t_memory_s']:.3f}s;"
+            f"t_coll={r['t_collective_s']:.3f}s;dom={r['dominant']};"
+            f"useful={r['useful_flops_ratio']:.2f};"
+            f"roofline={r['roofline_fraction']:.3f};"
+            f"GB/dev={r['mem_GB_per_device']:.2f}",
+        )
+    n_fit = sum(1 for r in rows if r["mem_GB_per_device"] <= 16.0)
+    doms = {}
+    for r in rows:
+        doms[r["dominant"]] = doms.get(r["dominant"], 0) + 1
+    emit(
+        "roofline/summary",
+        0.0,
+        f"cells={len(rows)};fit_16GB={n_fit};dominants={doms}",
+    )
+
+
+if __name__ == "__main__":
+    main()

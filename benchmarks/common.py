@@ -1,0 +1,50 @@
+"""Shared benchmark helpers.
+
+Simulation-backed benches use a 1/8-scaled A100 (SM count, L2, bandwidths all
+/8) with correspondingly scaled domains: the estimator is machine-parametric,
+so validating on the scaled machine is equivalent and keeps the LRU-simulator
+oracle tractable on this single-core container.
+"""
+from __future__ import annotations
+
+import time
+
+from repro.core.access import LaunchConfig
+from repro.core.machines import GPUMachine
+
+SMALL_A100 = GPUMachine(
+    name="A100/8",
+    n_sms=13,
+    clock_hz=1.41e9,
+    l1_bytes=192 * 1024,
+    l2_bytes=20 * 1024 * 1024 // 8,
+    dram_bw=1400e9 / 8,
+    l2_bw=5000e9 / 8,
+    peak_flops_dp=9.7e12 / 8,
+)
+
+# representative subset of the paper's eq.-6 grid (colors of fig. 13):
+# cubish / wide / tall / deep / flat shapes + foldings
+BLOCKS_512 = [
+    (64, 4, 2), (32, 4, 4), (16, 8, 4), (8, 8, 8), (128, 2, 2), (256, 2, 1),
+    (512, 1, 1), (2, 256, 1), (4, 64, 2), (16, 2, 16), (32, 1, 16), (1, 16, 32),
+]
+FOLDINGS = [(1, 1, 1), (1, 1, 2)]
+
+
+def configs_512():
+    return [LaunchConfig(block=b, folding=f) for b in BLOCKS_512 for f in FOLDINGS]
+
+
+def timed(fn, *args, **kw):
+    t0 = time.perf_counter()
+    out = fn(*args, **kw)
+    return out, (time.perf_counter() - t0) * 1e6
+
+
+def emit(name: str, us: float, derived: str):
+    print(f"{name},{us:.1f},{derived}")
+
+
+def rel_err(pred, meas):
+    return abs(pred - meas) / max(abs(meas), 1e-12)

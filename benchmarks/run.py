@@ -1,0 +1,48 @@
+"""Benchmark harness entry point — one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows (see DESIGN.md §6 for the
+figure-to-module index).  ``python -m benchmarks.run [module ...]`` runs a
+subset.
+"""
+from __future__ import annotations
+
+import sys
+import time
+import traceback
+
+MODULES = [
+    "bench_l1_cycles",        # fig 12
+    "bench_l2_volume",        # figs 13/14/15
+    "bench_dram_volume",      # figs 19-22
+    "bench_capacity_fit",     # figs 16/17/18
+    "bench_layer_condition",  # fig 23 / §5.7
+    "bench_perf_ranking",     # figs 24/25 / §5.8
+    "bench_kernel_select",    # fig 1 workflow on TPU
+    "bench_machine_compare",  # §1.1 cross-machine/hypothetical-GPU exploration
+    "bench_roofline",         # §Roofline table (reads experiments/dryrun)
+]
+
+
+def main() -> None:
+    import importlib
+
+    selected = sys.argv[1:] or MODULES
+    failures = []
+    for name in selected:
+        t0 = time.time()
+        print(f"# ==== {name} ====", flush=True)
+        try:
+            mod = importlib.import_module(f"benchmarks.{name}")
+            mod.main()
+            print(f"# {name} done in {time.time()-t0:.1f}s", flush=True)
+        except Exception:
+            failures.append(name)
+            print(f"# {name} FAILED:\n{traceback.format_exc()}", flush=True)
+    if failures:
+        print(f"# FAILURES: {failures}")
+        sys.exit(1)
+    print("# all benchmarks completed")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,71 @@
+"""Serving driver: batched prefill + decode with KV caches.
+
+Demonstrates the serving substrate across architecture families: full
+attention (granite), sliding-window + MoE (mixtral), attention-free (rwkv6),
+and the int8 KV-cache option.  Greedy-decodes a batch of synthetic prompts.
+
+Run:  PYTHONPATH=src python examples/serve_lm.py [--arch mixtral-8x7b]
+      [--kv-int8]
+"""
+import argparse
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.models.lm import init_params
+from repro.train.step import make_decode_step, make_prefill_step
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="mixtral-8x7b")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--gen-len", type=int, default=16)
+    ap.add_argument("--kv-int8", action="store_true")
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch).reduced()
+    if args.kv_int8:
+        cfg = dataclasses.replace(cfg, kv_int8=True)
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    B, S = args.batch, args.prompt_len
+    capacity = S + args.gen_len + 8
+
+    prompts = jax.random.randint(jax.random.PRNGKey(1), (B, S), 0, cfg.vocab)
+    frontend = (
+        jax.random.normal(jax.random.PRNGKey(2),
+                          (B, cfg.frontend_tokens, cfg.frontend_dim))
+        if cfg.frontend else None
+    )
+
+    prefill = jax.jit(make_prefill_step(cfg, capacity))
+    decode = jax.jit(make_decode_step(cfg))
+
+    t0 = time.time()
+    logits, caches, enc = prefill(params, prompts, frontend)
+    tok = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
+    print(f"prefill {B}x{S} in {time.time()-t0:.2f}s "
+          f"(kv_int8={cfg.kv_int8})")
+
+    pos0 = S + (cfg.frontend_tokens if cfg.frontend == "vision" else 0)
+    generated = [tok]
+    t0 = time.time()
+    for i in range(args.gen_len - 1):
+        positions = jnp.full((B, 1), pos0 + i, jnp.int32)
+        logits, caches = decode(params, tok, caches, positions, enc)
+        tok = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
+        generated.append(tok)
+    dt = time.time() - t0
+    out = jnp.concatenate(generated, axis=1)
+    print(f"decoded {args.gen_len} tokens/seq in {dt:.2f}s "
+          f"({B*args.gen_len/dt:.1f} tok/s batch throughput)")
+    for b in range(min(B, 2)):
+        print(f"  seq{b}: {out[b].tolist()}")
+
+
+if __name__ == "__main__":
+    main()

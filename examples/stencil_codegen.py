@@ -1,0 +1,51 @@
+"""Code generation + analytical selection, the pystencils integration (§1.2).
+
+Builds the paper's two applications — the range-4 3D25pt star stencil and the
+D3Q15 Allen-Cahn LBM interface-tracking kernel — from their specs, shows the
+generator's decision space with the estimator's pricing of every candidate,
+runs the selected kernels (interpret mode), and validates against the
+pure-jnp oracles.
+
+Run:  PYTHONPATH=src python examples/stencil_codegen.py
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.tpu_adapt import estimate_pallas
+from repro.kernels.lbm_d3q15.generator import candidate_specs as lbm_candidates
+from repro.kernels.lbm_d3q15.ops import lbm_step
+from repro.kernels.lbm_d3q15.ref import WEIGHTS, lbm_step_ref, pad_inputs
+from repro.kernels.stencil3d25.generator import candidate_specs as st_candidates
+from repro.kernels.stencil3d25.ops import star_stencil
+from repro.kernels.stencil3d25.ref import pad_input, star_stencil_ref, star_weights
+
+# ---- decision space for the paper's production stencil domain ------------
+print("stencil 3D25pt, domain (512, 512, 640), f64 — generator candidates:")
+for cfg, spec in st_candidates(4, (512, 512, 640), elem_bytes=8):
+    est = estimate_pallas(spec)
+    flag = "" if est.feasible else "  [VMEM layer condition violated]"
+    print(f"  {str(cfg):38s} {est.bytes_per_work:6.1f} B/pt  "
+          f"t={est.total_time*1e3:7.2f} ms  {est.limiter:5s}{flag}")
+
+print("\nLBM D3Q15, domain (256, 256, 256), f64 — generator candidates:")
+for cfg, spec in list(lbm_candidates((256, 256, 256), elem_bytes=8))[:5]:
+    est = estimate_pallas(spec)
+    print(f"  {str(cfg):38s} {est.bytes_per_work:6.1f} B/LUP "
+          f"t={est.total_time*1e3:7.2f} ms  {est.limiter}")
+
+# ---- run the selected kernels on small domains and validate --------------
+print("\nrunning selected kernels (interpret mode) vs oracles:")
+src = jax.random.normal(jax.random.PRNGKey(0), (6, 16, 32))
+w = star_weights(2)
+out = star_stencil(src, w, r=2)
+ref = star_stencil_ref(pad_input(src, 2), w, 2)
+print(f"  stencil allclose: {np.allclose(np.asarray(out), np.asarray(ref), atol=1e-5)}")
+
+phase = jax.nn.sigmoid(jax.random.normal(jax.random.PRNGKey(1), (4, 8, 16)))
+pdf = jnp.stack([wq * phase for wq in WEIGHTS])
+new_pdf, new_phase = lbm_step(pdf, phase)
+ref_pdf, ref_phase = lbm_step_ref(*pad_inputs(pdf, phase))
+print(f"  lbm allclose:     {np.allclose(np.asarray(new_pdf), np.asarray(ref_pdf), atol=1e-5)}")
+print(f"  phase conserved:  sum={float(new_phase.sum()):.4f} "
+      f"(ref {float(ref_phase.sum()):.4f})")

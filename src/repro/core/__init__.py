@@ -1,0 +1,45 @@
+"""Warpspeed-TPU: analytical performance estimation during code generation.
+
+The paper's contribution as a composable library:
+
+  * address expressions + launch config -> memory-hierarchy data volumes
+    (``access``, ``isets``, ``footprint``, ``gridwalk``, ``wave``)
+  * capacity-miss model (``capacity``) and LRU simulator oracle (``cachesim``)
+  * multi-limiter performance model + config ranking (``perfmodel``,
+    ``selector``) — the autotuning replacement
+  * TPU-native adaptation for Pallas kernels (``tpu_adapt``)
+  * mesh-level roofline from compiled HLO (``roofline``, ``hlo``)
+"""
+from .access import Access, Field, KernelSpec, LaunchConfig
+from .capacity import CapacityModel, HitRateFit, gompertz
+from .machines import A100, TPU_V5E, V100, GPUMachine, TPUMachine
+from .perfmodel import GPUEstimate, estimate_gpu
+from .selector import (
+    RankedConfig,
+    enumerate_gpu_configs,
+    rank_gpu_configs,
+    ranking_quality,
+    select_gpu_config,
+)
+from .tpu_adapt import (
+    MatmulShape,
+    OperandSpec,
+    PallasEstimate,
+    PallasKernelSpec,
+    estimate_pallas,
+    fetch_count,
+    select_pallas_config,
+)
+from .roofline import RooflineReport, analyze_compiled, format_roofline_table
+
+__all__ = [
+    "Access", "Field", "KernelSpec", "LaunchConfig",
+    "CapacityModel", "HitRateFit", "gompertz",
+    "A100", "V100", "TPU_V5E", "GPUMachine", "TPUMachine",
+    "GPUEstimate", "estimate_gpu",
+    "RankedConfig", "enumerate_gpu_configs", "rank_gpu_configs",
+    "ranking_quality", "select_gpu_config",
+    "MatmulShape", "OperandSpec", "PallasEstimate", "PallasKernelSpec",
+    "estimate_pallas", "fetch_count", "select_pallas_config",
+    "RooflineReport", "analyze_compiled", "format_roofline_table",
+]

@@ -1,0 +1,243 @@
+"""LRU sector-cache simulator — the measurement stand-in (DESIGN §2.1).
+
+The paper validates its estimates against hardware performance counters
+(lts__t_sectors_srcunit_tex_op_read etc.).  Without hardware we validate
+against an explicit cache simulation: an LRU cache with 128B line allocation
+and 32B sector transfer granularity (Volta/Ampere semantics, paper §4.3/4.4),
+driven by the block-scheduling order of the launch configuration.
+
+Two simulators:
+  * ``simulate_l1_block``   — per-thread-block L1 (write-through, sectors),
+    produces the "measured" L2->L1 volume for one block.
+  * ``simulate_l2_waves``   — chip-wide L2 across consecutive waves with
+    round-robin interleaving of warp instructions inside a wave (the paper's
+    "no order inside a wave"), produces "measured" DRAM load/store volumes
+    per lattice update, including warm-cache reuse and capacity misses.
+
+Performance: addresses are produced vectorized per (access x block) with
+numpy; the LRU core uses OrderedDict at per-warp-instruction granularity.
+"""
+from __future__ import annotations
+
+from collections import OrderedDict
+
+import numpy as np
+
+from .access import KernelSpec, LaunchConfig
+from .gridwalk import _clipped_thread_major, access_addresses, block_points
+from .machines import GPUMachine
+from .wave import occupancy_blocks_per_sm
+
+
+class SectorCache:
+    """LRU, 128B line allocation, 32B sector fills, write-back stores with
+    read-to-complete for partially written sectors on eviction.
+
+    ``measuring`` gates the volume counters; dirty sectors written while
+    measuring are tagged so their eventual write-back is attributed to the
+    measured wave even if evicted later (or at flush).
+    """
+
+    def __init__(self, capacity_bytes: int, line_bytes: int = 128, sector_bytes: int = 32):
+        self.lines = OrderedDict()  # id -> [present, written, read, measured]
+        self.max_lines = max(1, capacity_bytes // line_bytes)
+        self.sector_bytes = sector_bytes
+        self.spl = line_bytes // sector_bytes
+        self.measuring = False
+        self.load_bytes = 0            # DRAM->L2 fills while measuring
+        self.store_bytes = 0           # L2->DRAM write-backs of measured sectors
+        self.completion_read_bytes = 0 # partial-sector completion reads (measured)
+
+    def _evict_one(self):
+        _, (present, written, read, measured) = self.lines.popitem(last=False)
+        for s in range(self.spl):
+            bit = 1 << s
+            if written & bit and measured & bit:
+                self.store_bytes += self.sector_bytes
+                # partially written sector never completed by a read: DRAM
+                # must supply the missing bytes (paper §4.4)
+                if not (present & bit):
+                    self.completion_read_bytes += self.sector_bytes
+
+    def access(self, line_id: int, sector_bit: int, fully_written: bool, is_store: bool):
+        entry = self.lines.get(line_id)
+        if entry is None:
+            if len(self.lines) >= self.max_lines:
+                self._evict_one()
+            entry = [0, 0, 0, 0]
+            self.lines[line_id] = entry
+        else:
+            self.lines.move_to_end(line_id)
+        if is_store:
+            entry[1] |= sector_bit
+            if self.measuring:
+                entry[3] |= sector_bit
+            if fully_written:
+                entry[0] |= sector_bit
+        else:
+            if not (entry[0] & sector_bit):
+                if self.measuring:
+                    self.load_bytes += self.sector_bytes
+                entry[0] |= sector_bit
+            entry[2] |= sector_bit
+
+    def flush(self):
+        while self.lines:
+            self._evict_one()
+
+
+def _block_warp_streams(spec: KernelSpec, launch: LaunchConfig, domain, block_idx):
+    """Per-warp-instruction sector references of one block.
+
+    Returns a list over (access x warp x fold_iter) of tuples
+    (line_ids, sector_bits, fully_written flags, is_store).
+    """
+    pts_tm = _clipped_thread_major(launch, domain)  # (threads, fold, 3)
+    ex, ey, ez = launch.block_extent()
+    off = np.array(
+        [block_idx[2] * ez, block_idx[1] * ey, block_idx[0] * ex], dtype=np.int64
+    )
+    fold = pts_tm.shape[1]
+    out = []
+    for acc in spec.accesses:
+        eb = acc.field.elem_bytes
+        epc = max(1, 32 // eb)  # elements per sector
+        for w0 in range(0, launch.threads, 32):
+            hw = pts_tm[w0 : w0 + 32]
+            for j in range(fold):
+                sl = hw[:, j, :]
+                mask = sl[:, 0] >= 0
+                if not mask.any():
+                    continue
+                p = sl[mask] + off
+                addr = access_addresses(acc, p, len(domain))
+                sec = np.unique(addr // 32)
+                if acc.is_store:
+                    elems = np.unique(addr // eb)
+                    sec_of_elem = elems * eb // 32
+                    uniq, counts = np.unique(sec_of_elem, return_counts=True)
+                    fullmap = dict(zip(uniq.tolist(), (counts >= epc).tolist()))
+                    full = [bool(fullmap.get(int(s), False)) for s in sec]
+                else:
+                    full = [False] * len(sec)
+                out.append((sec // 4, sec % 4, full, acc.is_store))
+    return out
+
+
+def simulate_l1_block(
+    spec: KernelSpec,
+    launch: LaunchConfig,
+    machine: GPUMachine,
+    domain=None,
+    block_idx=(0, 0, 0),
+) -> dict:
+    """Measured L2<->L1 volumes for one thread block (write-through L1).
+
+    L1 capacity is shared by the blocks resident on the SM: capacity is
+    scaled by 1/blocks_per_sm (inter-block sharing considered unlikely,
+    paper §4.3).
+    """
+    domain = domain or spec.domain
+    bps = occupancy_blocks_per_sm(launch, machine.max_threads_per_sm)
+    cache = SectorCache(machine.l1_bytes // bps)
+    cache.measuring = True
+    store_bytes = 0
+    for line_ids, sec_in_line, full, is_store in _block_warp_streams(
+        spec, launch, domain, block_idx
+    ):
+        if is_store:
+            # write-through: every store op transfers its sectors to L2
+            store_bytes += len(line_ids) * 32
+            continue
+        for li, s in zip(line_ids, sec_in_line):
+            cache.access(int(li), 1 << int(s), False, False)
+    n_pts = len(block_points(launch, domain, block_idx))
+    return {
+        "l2_to_l1_load_bytes": cache.load_bytes,
+        "l1_to_l2_store_bytes": store_bytes,
+        "lups": n_pts,
+        "l2_to_l1_load_bytes_per_lup": cache.load_bytes / max(n_pts, 1),
+    }
+
+
+def simulate_l2_waves(
+    spec: KernelSpec,
+    launch: LaunchConfig,
+    machine: GPUMachine,
+    domain=None,
+    warm_waves: int = 2,
+    measure_waves: int = 1,
+    max_warm_blocks: int = 4096,
+) -> dict:
+    """Measured DRAM<->L2 volumes per LUP around a representative wave.
+
+    Warm-up blocks (up to a full z-plane of history, capped) populate the
+    cache; counters run only while the measured wave executes.  Warp
+    instructions of a wave's blocks are interleaved round-robin.
+    """
+    domain = domain or spec.domain
+    grid = launch.grid_for(domain)
+    gx, gy, gz = grid
+    total_blocks = gx * gy * gz
+    bps = occupancy_blocks_per_sm(launch, machine.max_threads_per_sm)
+    wave_blocks = min(machine.n_sms * bps, total_blocks)
+
+    mid_layer = gz // 2
+    start = gx * gy * mid_layer + gx * (gy // 3)
+    start = min(start, max(total_blocks - wave_blocks * measure_waves, 0))
+    start -= start % gx
+
+    warm_blocks = min(max(warm_waves * wave_blocks, gx * gy), max_warm_blocks, start)
+    first = start - warm_blocks
+    cache = SectorCache(machine.l2_bytes)
+
+    def run_wave(block_lin_ids):
+        streams = [
+            _block_warp_streams(
+                spec, launch, domain, (lin % gx, (lin // gx) % gy, lin // (gx * gy))
+            )
+            for lin in block_lin_ids
+        ]
+        maxlen = max((len(s) for s in streams), default=0)
+        for i in range(maxlen):
+            for s in streams:
+                if i < len(s):
+                    line_ids, sec_in_line, full, is_store = s[i]
+                    for li, sec, f in zip(line_ids, sec_in_line, full):
+                        cache.access(int(li), 1 << int(sec), f, is_store)
+
+    lin = first
+    while lin < start:
+        n = min(wave_blocks, start - lin)
+        run_wave(range(lin, lin + n))
+        lin += n
+
+    cache.measuring = True
+    measured_pts = 0
+    for _ in range(measure_waves):
+        n = min(wave_blocks, total_blocks - lin)
+        if n <= 0:
+            break
+        ids = list(range(lin, lin + n))
+        run_wave(ids)
+        for l in ids:
+            bidx = (l % gx, (l // gx) % gy, l // (gx * gy))
+            measured_pts += len(block_points(launch, domain, bidx))
+        lin += n
+    # run one cool-down wave unmeasured so measured lines see realistic
+    # eviction pressure, then flush to write back remaining measured sectors
+    cache.measuring = False
+    n = min(wave_blocks, total_blocks - lin)
+    if n > 0:
+        run_wave(range(lin, lin + n))
+    cache.measuring = True
+    cache.flush()
+    load_total = cache.load_bytes + cache.completion_read_bytes
+    return {
+        "dram_load_bytes": load_total,
+        "dram_store_bytes": cache.store_bytes,
+        "lups": measured_pts,
+        "dram_load_bytes_per_lup": load_total / max(measured_pts, 1),
+        "dram_store_bytes_per_lup": cache.store_bytes / max(measured_pts, 1),
+        "wave_blocks": wave_blocks,
+    }

@@ -1,0 +1,240 @@
+"""Explicit grid iteration + visitors (paper listing 5, figs. 4/5/8).
+
+This is the enumeration path: it walks every thread of a thread group, puts
+the thread coordinates into all address expressions, and hands the resulting
+address sets to visitors.  It is exact and serves as the oracle against which
+the implicit-set estimator (isets/footprint) is property-tested, and as the
+primary path for L1-level metrics where groups are small (warps/blocks).
+
+Vectorized with numpy meshgrid as in the paper (§4.2).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from .access import Access, KernelSpec, LaunchConfig
+
+
+def block_points(launch: LaunchConfig, domain: tuple, block_idx=(0, 0, 0)):
+    """(N,3) int array of (z,y,x) domain points of one thread block, ordered
+    by (warp-major) thread id, folding unrolled innermost.
+
+    Thread t = (tx,ty,tz) with folding (fx,fy,fz) computes points
+    (bz*ez + tz*fz + jz, by*ey + ty*fy + jy, bx*ex + tx*fx + jx).
+    Points outside the domain are dropped (guard clause intersection).
+    """
+    bx, by, bz = launch.block
+    fx, fy, fz = launch.folding
+    ex, ey, ez = launch.block_extent()
+    ox, oy, oz = block_idx[0] * ex, block_idx[1] * ey, block_idx[2] * ez
+    tz, ty, tx = np.meshgrid(
+        np.arange(bz), np.arange(by), np.arange(bx), indexing="ij"
+    )
+    # thread linear id: x fastest (CUDA convention)
+    tid = (tz * by + ty) * bx + tx
+    order = np.argsort(tid.ravel(), kind="stable")
+    tx, ty, tz = tx.ravel()[order], ty.ravel()[order], tz.ravel()[order]
+    pts = []
+    for jz in range(fz):
+        for jy in range(fy):
+            for jx in range(fx):
+                px = ox + tx * fx + jx
+                py = oy + ty * fy + jy
+                pz = oz + tz * fz + jz
+                pts.append(np.stack([pz, py, px], axis=1))
+    # interleave folding iterations per thread: thread-major ordering
+    arr = np.stack(pts, axis=1).reshape(-1, 3)  # (threads*fold, 3) thread-major
+    if len(domain) == 3:
+        dz, dy, dx = domain
+    elif len(domain) == 2:
+        dz, dy, dx = 1, domain[0], domain[1]
+    else:
+        dz, dy, dx = 1, 1, domain[0]
+    m = (arr[:, 0] < dz) & (arr[:, 1] < dy) & (arr[:, 2] < dx)
+    return arr[m]
+
+
+def access_addresses(acc: Access, pts: np.ndarray, domain_ndim: int = 3) -> np.ndarray:
+    """Linear *byte* addresses (incl. alignment) for domain points (N,3).
+
+    Points are always (z,y,x) columns; ``dim_map`` indexes the kernel's domain
+    dims (slowest..fastest), i.e. column ``3 - domain_ndim + d``.
+    """
+    nd = acc.field.ndim
+    coords = []
+    for j in range(nd):
+        d = acc.dim_map[j]
+        col = 3 - domain_ndim + d
+        coords.append(acc.coeffs[j] * pts[:, col] + acc.offsets[j])
+    addr = np.zeros(len(pts), dtype=np.int64)
+    for dim, c in enumerate(coords):
+        addr = addr * acc.field.shape[dim] + c
+    return (addr + acc.field.alignment) * acc.field.elem_bytes
+
+
+# --------------------------------------------------------------------------
+# Visitors (paper figs. 5 and 8)
+# --------------------------------------------------------------------------
+class CLVisitor:
+    """Counts unique cache lines of a given granularity (fig. 8)."""
+
+    def __init__(self, line_bytes: int):
+        self.line_bytes = line_bytes
+        self.lines: set = set()
+
+    def count(self, field_name: str, byte_addresses: np.ndarray):
+        self.lines.update(
+            (field_name, int(l)) for l in np.unique(byte_addresses // self.line_bytes)
+        )
+
+    @property
+    def n_lines(self) -> int:
+        return len(self.lines)
+
+    def volume(self) -> int:
+        return self.n_lines * self.line_bytes
+
+
+class BankConflictVisitor:
+    """L1 wavefront/cycle model (paper §4.2, figs. 4/5).
+
+    128B lines over 16 banks x 8B.  A half warp (16 threads) issues one
+    load; cycles = max addresses per bank among *unique* 8B words, with the
+    additional rule that addresses farther than ``window`` (1024B) apart
+    cannot share a wavefront.
+    """
+
+    N_BANKS = 16
+    BANK_BYTES = 8
+    WINDOW = 1024
+
+    def __init__(self):
+        self.cycles = 0
+
+    def count(self, field_name: str, byte_addresses: np.ndarray):
+        words = np.unique(byte_addresses // self.BANK_BYTES)
+        if len(words) == 0:
+            return
+        windows = np.unique(words * self.BANK_BYTES // self.WINDOW)
+        banks = words % self.N_BANKS
+        _, bank_counts = np.unique(banks, return_counts=True)
+        self.cycles += max(int(bank_counts.max()), len(windows))
+
+
+def walk_block_l1(
+    spec: KernelSpec, launch: LaunchConfig, domain=None, half_warp: int = 16
+):
+    """Average L1 cycles per work unit for one thread block (paper §4.2).
+
+    Iterates all half warps of a representative block; for each access, one
+    load instruction per folding iteration.
+    """
+    domain = domain or spec.domain
+    pts = block_points(launch, domain)
+    fold = int(np.prod(launch.folding))
+    n_threads = launch.threads
+    cycles = 0
+    # points are thread-major: reshape (threads, fold, 3)
+    pts_tm = pts.reshape(-1, fold, 3) if len(pts) == n_threads * fold else None
+    if pts_tm is None:
+        # guard-clipped block: fall back to per-half-warp masking
+        pts_tm = _clipped_thread_major(launch, domain)
+    vis = BankConflictVisitor()
+    for acc in spec.accesses:
+        for w0 in range(0, n_threads, half_warp):
+            hw = pts_tm[w0 : w0 + half_warp]  # (<=16, fold, 3)
+            for j in range(fold):
+                sl = hw[:, j, :]
+                sl = sl[sl[:, 0] >= 0]
+                if len(sl) == 0:
+                    continue
+                vis.count(acc.field.name, access_addresses(acc, sl, len(domain)))
+    lups = len(pts)
+    return vis.cycles / max(lups, 1)
+
+
+def _clipped_thread_major(launch: LaunchConfig, domain):
+    bx, by, bz = launch.block
+    fx, fy, fz = launch.folding
+    tz, ty, tx = np.meshgrid(np.arange(bz), np.arange(by), np.arange(bx), indexing="ij")
+    tid = (tz * by + ty) * bx + tx
+    order = np.argsort(tid.ravel(), kind="stable")
+    tx, ty, tz = tx.ravel()[order], ty.ravel()[order], tz.ravel()[order]
+    if len(domain) == 3:
+        dz, dy, dx = domain
+    elif len(domain) == 2:
+        dz, dy, dx = 1, domain[0], domain[1]
+    else:
+        dz, dy, dx = 1, 1, domain[0]
+    out = np.full((launch.threads, fx * fy * fz, 3), -1, dtype=np.int64)
+    j = 0
+    for jz in range(fz):
+        for jy in range(fy):
+            for jx in range(fx):
+                px, py, pz = tx * fx + jx, ty * fy + jy, tz * fz + jz
+                ok = (px < dx) & (py < dy) & (pz < dz)
+                col = np.stack([pz, py, px], axis=1)
+                col[~ok] = -1
+                out[:, j, :] = col
+                j += 1
+    return out
+
+
+def access_line_tuples(acc: Access, pts: np.ndarray, domain_ndim: int,
+                       line_bytes: int) -> set:
+    """Multi-dimensional line tuples (paper §4.4.1): floor-div by the line
+    size only in the innermost dim — the address space the implicit-set
+    estimator counts in (exact up to row wrap-around, which the paper shows
+    is negligible; the linear-address cache simulator covers that side)."""
+    nd = acc.field.ndim
+    coords = []
+    for j in range(nd):
+        d = acc.dim_map[j]
+        col = 3 - domain_ndim + d
+        coords.append(acc.coeffs[j] * pts[:, col] + acc.offsets[j])
+    eb = acc.field.elem_bytes
+    x_line = (eb * (coords[-1] + acc.field.alignment)) // line_bytes
+    cols = coords[:-1] + [x_line]
+    arr = np.stack(cols, axis=1)
+    return {(acc.field.name,) + tuple(int(v) for v in row) for row in arr}
+
+
+def block_footprint_bytes(
+    spec: KernelSpec,
+    launch: LaunchConfig,
+    line_bytes: int = 32,
+    which: str = "loads",
+    domain=None,
+    block_idx=(0, 0, 0),
+) -> int:
+    """Unique footprint (bytes, line-granular) of one thread block (oracle)."""
+    domain = domain or spec.domain
+    pts = block_points(launch, domain, block_idx)
+    accs = spec.loads if which == "loads" else spec.stores if which == "stores" else spec.accesses
+    lines: set = set()
+    for acc in accs:
+        lines |= access_line_tuples(acc, pts, len(domain), line_bytes)
+    return len(lines) * line_bytes
+
+
+def warp_sector_requests(
+    spec: KernelSpec, launch: LaunchConfig, sector_bytes: int = 32, domain=None
+) -> int:
+    """Total 32B-sector requests issued by a block: per-warp unique sectors,
+    summed over warps and load instructions — the no-inter-warp-reuse upper
+    bound on the L2->L1 volume (paper fig. 15's outlined bar)."""
+    domain = domain or spec.domain
+    fold = int(np.prod(launch.folding))
+    pts_tm = _clipped_thread_major(launch, domain)
+    total = 0
+    for acc in spec.loads:
+        for w0 in range(0, launch.threads, 32):
+            hw = pts_tm[w0 : w0 + 32]
+            for j in range(fold):
+                sl = hw[:, j, :]
+                sl = sl[sl[:, 0] >= 0]
+                if len(sl) == 0:
+                    continue
+                a = access_addresses(acc, sl, len(domain))
+                total += len(np.unique(a // sector_bytes))
+    return total * sector_bytes

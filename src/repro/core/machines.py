@@ -1,0 +1,83 @@
+"""Machine models (paper Table 1 + our TPU v5e target).
+
+GPU models carry the paper's measured parameters; the TPU model carries the
+hardware constants given for the production target (197 TFLOP/s bf16, 819 GB/s
+HBM, ~50 GB/s/link ICI).  VMEM size/bandwidth are model constants documented
+here — on a software-managed hierarchy they bound block residency and the
+VMEM<->VREG limiter the way L1 capacity/bandwidth do on the GPU.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+
+@dataclass(frozen=True)
+class GPUMachine:
+    name: str
+    n_sms: int
+    clock_hz: float
+    l1_bytes: int
+    l2_bytes: int          # effective (A100: one 20MB section, paper §3)
+    dram_bw: float         # B/s
+    l2_bw: float           # B/s
+    peak_flops_dp: float
+    max_threads_per_sm: int = 2048
+    sector_bytes: int = 32
+    line_bytes: int = 128
+
+    @property
+    def l1_total(self) -> int:
+        return self.l1_bytes * self.n_sms
+
+
+A100 = GPUMachine(
+    name="A100-SXM4-40G",
+    n_sms=108,
+    clock_hz=1.41e9,
+    l1_bytes=192 * 1024,
+    l2_bytes=20 * 1024 * 1024,  # split L2: effective capacity halved (paper §3)
+    dram_bw=1400e9,
+    l2_bw=5000e9,
+    peak_flops_dp=9.7e12,
+)
+
+V100 = GPUMachine(
+    name="V100-PCIe-32GB",
+    n_sms=80,
+    clock_hz=1.38e9,
+    l1_bytes=128 * 1024,
+    l2_bytes=6 * 1024 * 1024,
+    dram_bw=800e9,
+    l2_bw=2500e9,
+    peak_flops_dp=7.0e12,
+)
+
+
+@dataclass(frozen=True)
+class TPUMachine:
+    """Single-chip TPU model + ICI mesh parameters (v5e-class)."""
+
+    name: str = "TPUv5e"
+    peak_flops_bf16: float = 197e12
+    peak_flops_f32: float = 197e12 / 4
+    hbm_bw: float = 819e9              # B/s per chip
+    hbm_bytes: int = 16 * 1024**3
+    vmem_bytes: int = 128 * 1024 * 1024  # model constant (per-core VMEM budget)
+    vmem_bw: float = 4.0e12            # B/s VMEM<->VREG model constant
+    ici_bw_per_link: float = 50e9      # B/s per link per direction
+    ici_links: int = 4                 # 2D torus: 4 links/chip (2 axes x 2 dirs)
+    mxu_dim: int = 128                 # systolic array edge
+    vpu_lanes: int = 128
+    vpu_sublanes: int = 8
+    vpu_flops: float = 197e12 / 16     # vector (non-MXU) throughput model
+    grid_step_overhead_s: float = 1e-7 # per-grid-step pipeline bubble model
+
+    def sublane_elems(self, elem_bytes: int) -> int:
+        """Second-to-last-dim tile granularity: 8 for 4B, 16 for 2B, 32 for 1B."""
+        return self.vpu_sublanes * max(1, 4 // elem_bytes)
+
+    def peak_flops(self, elem_bytes: int) -> float:
+        return self.peak_flops_bf16 if elem_bytes <= 2 else self.peak_flops_f32
+
+
+TPU_V5E = TPUMachine()

@@ -1,0 +1,228 @@
+"""Multi-limiter performance model + full GPU estimation pipeline (paper §2-4).
+
+The classic roofline model's two limiters (DRAM bandwidth, peak FP) are
+extended with L2 bandwidth and L1 load/store throughput (paper §2).  Predicted
+performance is the minimum over the per-limiter rates; the argmin identifies
+the bottleneck — insight black-box tuning cannot give.
+
+``estimate_gpu`` is the estimator workflow of fig. 1: address expressions +
+launch config -> hardware metrics -> performance prediction.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field as dc_field
+
+from .access import KernelSpec, LaunchConfig
+from .capacity import CapacityModel
+from .footprint import footprint_boxes, footprint_bytes, overlap_bytes
+from .gridwalk import block_footprint_bytes, walk_block_l1, warp_sector_requests
+from .isets import count_intersection_of_unions, count_union
+from .machines import GPUMachine
+from .wave import build_wave_sets, occupancy_blocks_per_sm
+
+
+@dataclass
+class VolumeBreakdown:
+    """Per-LUP volumes (bytes) with compulsory/capacity/saved attribution."""
+
+    compulsory: float = 0.0
+    capacity: float = 0.0
+    saved_y: float = 0.0
+    saved_z: float = 0.0
+    total: float = 0.0
+    detail: dict = dc_field(default_factory=dict)
+
+
+@dataclass
+class GPUEstimate:
+    kernel: str
+    launch: LaunchConfig
+    machine: str
+    lups: int
+    l1_cycles_per_lup: float
+    l2_l1_load_per_lup: float
+    l2_l1_store_per_lup: float
+    dram_load_per_lup: float
+    dram_store_per_lup: float
+    dram_breakdown: VolumeBreakdown = None
+    l2_breakdown: VolumeBreakdown = None
+    flops_per_lup: float = 0.0
+    perf_lups: float = 0.0         # predicted LUP/s
+    limiter: str = ""
+    limiter_rates: dict = dc_field(default_factory=dict)
+
+    @property
+    def time_per_lup(self) -> float:
+        return 1.0 / self.perf_lups if self.perf_lups > 0 else math.inf
+
+
+def _interior_block(grid: tuple) -> tuple:
+    return (grid[0] // 2, grid[1] // 2, grid[2] // 2)
+
+
+def estimate_l1(spec: KernelSpec, launch: LaunchConfig, machine: GPUMachine,
+                capacity: CapacityModel, domain=None) -> dict:
+    """L1 cycles + L2<->L1 volumes for a representative interior block."""
+    domain = domain or spec.domain
+    grid = launch.grid_for(domain)
+    bidx = _interior_block(grid)
+    cycles = walk_block_l1(spec, launch, domain)
+    pts = launch.points_per_block()
+    # compulsory: unique sectors of the whole block; upper bound: per-warp sums
+    v_comp = block_footprint_bytes(spec, launch, 32, "loads", domain, bidx)
+    v_up = warp_sector_requests(spec, launch, 32, domain)
+    v_alloc = block_footprint_bytes(spec, launch, 128, "all", domain, bidx)
+    bps = occupancy_blocks_per_sm(launch, machine.max_threads_per_sm)
+    r_hit = capacity.hit_rate("l1_loads", v_alloc * bps, machine.l1_bytes)
+    v_cap = (1.0 - r_hit) * max(0.0, v_up - v_comp)
+    v_store = block_footprint_bytes(spec, launch, 32, "stores", domain, bidx)
+    return {
+        "cycles_per_lup": cycles,
+        "load_per_lup": (v_comp + v_cap) / pts,
+        "store_per_lup": v_store / pts,  # write-through, sector granular
+        "comp_per_lup": v_comp / pts,
+        "cap_per_lup": v_cap / pts,
+        "upper_per_lup": v_up / pts,
+        "alloc_bytes": v_alloc,
+        "r_hit": r_hit,
+    }
+
+
+def estimate_dram(spec: KernelSpec, launch: LaunchConfig, machine: GPUMachine,
+                  capacity: CapacityModel, domain=None) -> dict:
+    """DRAM<->L2 volumes via the wave model + layer-condition reuse (§4.4)."""
+    domain = domain or spec.domain
+    ws = build_wave_sets(spec, launch, machine.n_sms,
+                         max_threads_per_sm=machine.max_threads_per_sm)
+    wave_pts = count_union(ws.wave)
+    if wave_pts == 0:
+        raise ValueError("empty wave")
+    sect = machine.sector_bytes
+    # compulsory load volume of the wave
+    f_wave = footprint_boxes(spec.loads, ws.wave, sect)
+    v_comp = sum(count_union(b) for b in f_wave.values()) * sect
+
+    # --- warm-cache reuse via per-dimension layer sets (§4.4.2) ---------
+    saved_y = saved_z = 0.0
+    v_ov_y = v_ov_z = 0.0
+    r_y = r_z = 0.0
+    f_y = footprint_boxes(spec.loads, ws.y_layer, sect) if ws.y_layer else {}
+    f_z = footprint_boxes(spec.loads, ws.z_layer, sect) if ws.z_layer else {}
+    if f_y:
+        v_ov_y = sum(
+            count_intersection_of_unions(f_wave[k], f_y[k]) for k in f_wave if k in f_y
+        ) * sect
+        alloc_y = footprint_bytes(spec.accesses, ws.y_layer, machine.line_bytes)
+        r_y = capacity.hit_rate("l2_over_y", alloc_y, machine.l2_bytes)
+        saved_y = r_y * v_ov_y
+    if f_z:
+        v_ov_z = sum(
+            count_intersection_of_unions(f_wave[k], f_z[k]) for k in f_wave if k in f_z
+        ) * sect
+        if f_y:
+            # overlap of all three (wave ∩ z ∩ y) — subtract from z credit
+            triple = 0
+            for k in f_wave:
+                if k in f_z and k in f_y:
+                    inter = []
+                    from .isets import box_intersect, box_is_empty
+
+                    for ba in f_wave[k]:
+                        for bb in f_z[k]:
+                            ib = box_intersect(ba, bb)
+                            if not box_is_empty(ib):
+                                inter.append(ib)
+                    triple += count_intersection_of_unions(inter, f_y[k])
+            v_ov_z = max(0.0, v_ov_z - triple * sect)
+        alloc_z = footprint_bytes(spec.accesses, ws.z_layer, machine.line_bytes)
+        r_z = capacity.hit_rate("l2_over_z", alloc_z, machine.l2_bytes)
+        saved_z = r_z * v_ov_z
+
+    # --- stores ---------------------------------------------------------
+    v_store_comp = footprint_bytes(spec.stores, ws.wave, sect)
+    # per-block redundancy: sum of block store footprints vs wave unique
+    grid = ws.grid
+    bidx = _interior_block(grid)
+    blk_store = block_footprint_bytes(spec, launch, sect, "stores", domain, bidx)
+    v_store_up = blk_store * ws.n_blocks
+    alloc_wave = footprint_bytes(spec.accesses, ws.wave, machine.line_bytes)
+    r_store = capacity.hit_rate("l2_store", alloc_wave, machine.l2_bytes)
+    v_store_red = max(0.0, v_store_up - v_store_comp)
+    v_store_cap = (1.0 - r_store) * v_store_red
+    # partially-written sectors evicted before completion are re-read (§4.4)
+    completion_reads = v_store_cap
+
+    v_load = v_comp - saved_y - saved_z + completion_reads
+    v_store = v_store_comp + v_store_cap
+    return {
+        "load_per_lup": v_load / wave_pts,
+        "store_per_lup": v_store / wave_pts,
+        "breakdown": VolumeBreakdown(
+            compulsory=v_comp / wave_pts,
+            capacity=(v_store_cap + completion_reads) / wave_pts,
+            saved_y=saved_y / wave_pts,
+            saved_z=saved_z / wave_pts,
+            total=(v_load + v_store) / wave_pts,
+            detail={
+                "v_ov_y_per_lup": v_ov_y / wave_pts,
+                "v_ov_z_per_lup": v_ov_z / wave_pts,
+                "r_y": r_y,
+                "r_z": r_z,
+                "r_store": r_store,
+                "store_comp_per_lup": v_store_comp / wave_pts,
+                "wave_blocks": ws.n_blocks,
+            },
+        ),
+        "wave_pts": wave_pts,
+    }
+
+
+def estimate_gpu(
+    spec: KernelSpec,
+    launch: LaunchConfig,
+    machine: GPUMachine,
+    capacity: CapacityModel | None = None,
+    domain=None,
+) -> GPUEstimate:
+    """Full estimator pipeline (paper fig. 1): metrics -> multi-limiter model."""
+    capacity = capacity or CapacityModel()
+    domain = domain or spec.domain
+    l1 = estimate_l1(spec, launch, machine, capacity, domain)
+    dram = estimate_dram(spec, launch, machine, capacity, domain)
+
+    flops = spec.flops_per_point
+    # limiter rates in LUP/s (paper §2: four limiters)
+    rates = {
+        "L1": machine.n_sms * machine.clock_hz / max(l1["cycles_per_lup"], 1e-12),
+        "L2": machine.l2_bw / max(l1["load_per_lup"] + l1["store_per_lup"], 1e-12),
+        "DRAM": machine.dram_bw
+        / max(dram["load_per_lup"] + dram["store_per_lup"], 1e-12),
+        "FP": machine.peak_flops_dp / max(flops, 1e-12),
+    }
+    limiter = min(rates, key=rates.get)
+    n_pts = 1
+    for d in domain:
+        n_pts *= d
+    return GPUEstimate(
+        kernel=spec.name,
+        launch=launch,
+        machine=machine.name,
+        lups=n_pts,
+        l1_cycles_per_lup=l1["cycles_per_lup"],
+        l2_l1_load_per_lup=l1["load_per_lup"],
+        l2_l1_store_per_lup=l1["store_per_lup"],
+        dram_load_per_lup=dram["load_per_lup"],
+        dram_store_per_lup=dram["store_per_lup"],
+        dram_breakdown=dram["breakdown"],
+        l2_breakdown=VolumeBreakdown(
+            compulsory=l1["comp_per_lup"],
+            capacity=l1["cap_per_lup"],
+            total=l1["load_per_lup"] + l1["store_per_lup"],
+            detail={"upper_per_lup": l1["upper_per_lup"], "r_hit": l1["r_hit"]},
+        ),
+        flops_per_lup=flops,
+        perf_lups=min(rates.values()),
+        limiter=limiter,
+        limiter_rates=rates,
+    )

@@ -1,0 +1,114 @@
+"""Kernel access-specs for the paper's applications and microbenchmarks.
+
+These are the "address expressions + field sizes" artifacts a code generator
+hands to the estimator (paper §1.2).  The same specs drive the GPU estimator,
+the cache simulator, and (via kernels/) the generated Pallas TPU kernels.
+"""
+from __future__ import annotations
+
+from .access import Access, Field, KernelSpec
+
+
+def star_stencil_3d(
+    r: int = 4, domain=(512, 512, 640), elem_bytes: int = 8, name: str | None = None
+) -> KernelSpec:
+    """Range-r 3D star stencil (paper §5.2: r=4 -> 25-point).
+
+    dst[z,y,x] = w * sum of src at +-1..r along each axis + center.
+    Flops: 25 for the paper's stencil (24 adds + 1 mul equivalent mix).
+    """
+    dz, dy, dx = domain
+    # halo-padded source so offsets stay in bounds; alignment 0
+    src = Field("src", (dz + 2 * r, dy + 2 * r, dx + 2 * r), elem_bytes)
+    dst = Field("dst", (dz, dy, dx), elem_bytes)
+    accs = [Access(src, (r + 0, r + 0, r + 0))]  # center
+    for d in range(3):
+        for o in range(1, r + 1):
+            for s in (-o, o):
+                off = [r, r, r]
+                off[d] += s
+                accs.append(Access(src, tuple(off)))
+    accs.append(Access(dst, (0, 0, 0), is_store=True))
+    n_pts = 6 * r + 1
+    return KernelSpec(
+        name=name or f"star3d_r{r}",
+        domain=domain,
+        accesses=tuple(accs),
+        flops_per_point=float(n_pts),
+    )
+
+
+def stencil_2d5pt(domain=(4096, 4096), elem_bytes: int = 8) -> KernelSpec:
+    """2D 5-point stencil (paper figs. 6/7/9 illustrations)."""
+    dy, dx = domain
+    src = Field("src", (dy + 2, dx + 2), elem_bytes)
+    dst = Field("dst", (dy, dx), elem_bytes)
+    accs = [
+        Access(src, (1, 1)),
+        Access(src, (0, 1)),
+        Access(src, (2, 1)),
+        Access(src, (1, 0)),
+        Access(src, (1, 2)),
+        Access(dst, (0, 0), is_store=True),
+    ]
+    return KernelSpec("stencil2d5pt", domain, tuple(accs), flops_per_point=5.0)
+
+
+# D3Q15 lattice velocities (c_q), the conventional ordering
+D3Q15_VELOCITIES = (
+    (0, 0, 0),
+    (1, 0, 0), (-1, 0, 0), (0, 1, 0), (0, -1, 0), (0, 0, 1), (0, 0, -1),
+    (1, 1, 1), (-1, -1, -1), (1, 1, -1), (-1, -1, 1),
+    (1, -1, 1), (-1, 1, -1), (-1, 1, 1), (1, -1, -1),
+)
+
+# 3D7pt offsets for the phase-field finite-difference curvature stencil
+D3Q7_OFFSETS = ((0, 0, 0), (1, 0, 0), (-1, 0, 0), (0, 1, 0), (0, -1, 0), (0, 0, 1), (0, 0, -1))
+
+
+def lbm_d3q15(domain=(256, 256, 256), elem_bytes: int = 8) -> KernelSpec:
+    """Allen-Cahn interface-tracking LBM kernel access pattern (paper §5.3).
+
+    Pull scheme: 15 PDF loads from neighbor cells (unaligned), 15 aligned PDF
+    stores, plus a 3D 7-point finite-difference stencil on the phase field.
+    PDFs are stored structure-of-arrays: pdf[q][z][y][x].
+    240 B/LUP streaming + 16-64 B/LUP stencil component (paper).
+    """
+    dz, dy, dx = domain
+    pad = 1
+    src = Field("pdf_src", (15, dz + 2 * pad, dy + 2 * pad, dx + 2 * pad), elem_bytes)
+    dst = Field("pdf_dst", (15, dz, dy, dx), elem_bytes)
+    phi = Field("phase", (dz + 2 * pad, dy + 2 * pad, dx + 2 * pad), elem_bytes)
+    accs = []
+    for q, (cx, cy, cz) in enumerate(D3Q15_VELOCITIES):
+        # pull: load PDF q from the upstream neighbor (-c)
+        accs.append(
+            Access(
+                src,
+                (q, pad - cz, pad - cy, pad - cx),
+                coeffs=(0, 1, 1, 1),
+                dim_map=(0, 0, 1, 2),
+            )
+        )
+        accs.append(
+            Access(dst, (q, 0, 0, 0), coeffs=(0, 1, 1, 1), dim_map=(0, 0, 1, 2), is_store=True)
+        )
+    for (ox, oy, oz) in D3Q7_OFFSETS:
+        accs.append(Access(phi, (pad + oz, pad + oy, pad + ox)))
+    # LBM collide+stream flop estimate for Allen-Cahn interface tracking
+    return KernelSpec("lbm_d3q15", domain, tuple(accs), flops_per_point=180.0)
+
+
+def streaming_load(n: int, elem_bytes: int = 8) -> KernelSpec:
+    """c = A[i]  (paper fig. 2 LOAD kernel)."""
+    a = Field("A", (n,), elem_bytes)
+    return KernelSpec("load", (n,), (Access(a, (0,)),), flops_per_point=0.0)
+
+
+def streaming_scale(n: int, elem_bytes: int = 8) -> KernelSpec:
+    """A[i] = c * B[i]  (paper figs. 2/3 SCALE kernel)."""
+    a = Field("A", (n,), elem_bytes)
+    b = Field("B", (n,), elem_bytes)
+    return KernelSpec(
+        "scale", (n,), (Access(b, (0,)), Access(a, (0,), is_store=True)), flops_per_point=1.0
+    )

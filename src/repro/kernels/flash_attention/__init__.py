@@ -1,0 +1,1 @@
+from . import generator, kernel, ops, ref  # noqa: F401

@@ -1,0 +1,53 @@
+"""Flash-attention block-size selection via the analytical estimator."""
+from __future__ import annotations
+
+from repro.core.machines import TPUMachine, TPU_V5E
+from repro.core.tpu_adapt import (
+    MatmulShape,
+    OperandSpec,
+    PallasKernelSpec,
+    pow2_tiles,
+    select_pallas_config,
+)
+
+
+def candidate_specs(B, Hq, Hkv, Sq, Skv, D, causal=True, elem_bytes=2):
+    tri = 0.5 if causal and Sq == Skv else 1.0  # triangular work/traffic factor
+    for bq in pow2_tiles(128, min(Sq, 1024)):
+        if Sq % bq:
+            continue
+        for bk in pow2_tiles(128, min(Skv, 2048)):
+            if Skv % bk:
+                continue
+            grid = (B * Hq, Sq // bq, Skv // bk)
+            yield (
+                {"bq": bq, "bk": bk},
+                PallasKernelSpec(
+                    name=f"fa_{bq}x{bk}",
+                    grid=grid,
+                    operands=(
+                        OperandSpec("q", (1, 1, bq, D), elem_bytes, grid_deps=(0, 1)),
+                        OperandSpec("k", (1, 1, bk, D), elem_bytes, grid_deps=(0, 2)),
+                        OperandSpec("v", (1, 1, bk, D), elem_bytes, grid_deps=(0, 2)),
+                        OperandSpec(
+                            "o", (1, 1, bq, D), elem_bytes, grid_deps=(0, 1), is_output=True
+                        ),
+                    ),
+                    matmuls_per_step=(
+                        MatmulShape(bq, D, bk),
+                        MatmulShape(bq, bk, D),
+                    ),
+                    vpu_elems_per_step=6.0 * bq * bk * tri,  # exp, mask, rescale
+                    vpu_shape=(bq, bk),
+                    scratch_bytes=(bq * D + 2 * bq * 128) * 4,
+                    work_per_step=float(bq * bk) * tri,
+                    elem_bytes=elem_bytes,
+                ),
+            )
+
+
+def rank_configs(B, Hq, Hkv, Sq, Skv, D, causal=True, machine: TPUMachine = TPU_V5E,
+                 elem_bytes=2):
+    return select_pallas_config(
+        candidate_specs(B, Hq, Hkv, Sq, Skv, D, causal, elem_bytes), machine
+    )

@@ -1,0 +1,30 @@
+"""Pure-jnp oracle for causal GQA attention (prefill and decode)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def attention_ref(q, k, v, causal: bool = True, scale: float | None = None):
+    """q: (B, Hq, Sq, D); k/v: (B, Hkv, Skv, D); GQA via head repetition."""
+    B, Hq, Sq, D = q.shape
+    Hkv = k.shape[1]
+    group = Hq // Hkv
+    scale = scale if scale is not None else D ** -0.5
+    kr = jnp.repeat(k, group, axis=1)
+    vr = jnp.repeat(v, group, axis=1)
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32), kr.astype(jnp.float32))
+    s = s * scale
+    if causal:
+        Skv = k.shape[2]
+        # decode convention: query i attends keys [0, Skv - Sq + i]
+        qi = jnp.arange(Sq)[:, None] + (Skv - Sq)
+        ki = jnp.arange(Skv)[None, :]
+        s = jnp.where(ki <= qi, s, -jnp.inf)
+    p = jax_softmax(s)
+    return jnp.einsum("bhqk,bhkd->bhqd", p, vr.astype(jnp.float32)).astype(q.dtype)
+
+
+def jax_softmax(s):
+    m = jnp.max(s, axis=-1, keepdims=True)
+    e = jnp.exp(s - m)
+    return e / jnp.sum(e, axis=-1, keepdims=True)

@@ -1,0 +1,79 @@
+"""LBM kernel generator + estimator coupling (paper §5.3 on TPU)."""
+from __future__ import annotations
+
+from repro.core.machines import TPUMachine, TPU_V5E
+from repro.core.tpu_adapt import OperandSpec, PallasKernelSpec, select_pallas_config
+
+from .kernel import make_kernel
+
+FLOPS_PER_LUP = 15 * 8 + 25  # relax+equilibrium per PDF + gradient/normal math
+
+
+def candidate_specs(domain: tuple, elem_bytes: int = 4):
+    Z, Y, X = domain
+    Yp, Xp = Y + 2, X + 2
+
+    # replane
+    ops = tuple(
+        OperandSpec(f"pdf{q}", (1, 1, Yp, Xp), elem_bytes, grid_deps=(0,))
+        for q in range(15)
+    ) + tuple(
+        OperandSpec(f"phase{k}", (1, Yp, Xp), elem_bytes, grid_deps=(0,)) for k in range(3)
+    ) + (
+        OperandSpec("dst", (15, 1, Y, X), elem_bytes, grid_deps=(0,), is_output=True),
+    )
+    yield (
+        {"variant": "replane"},
+        PallasKernelSpec(
+            name="lbm_replane",
+            grid=(Z,),
+            operands=ops,
+            vpu_elems_per_step=float(FLOPS_PER_LUP * Y * X),
+            vpu_shape=(Y, X),
+            work_per_step=float(Y * X),
+            elem_bytes=elem_bytes,
+        ),
+    )
+
+    ty = 8
+    while ty <= Y // 2:
+        if Y % ty == 0:
+            ops_t = tuple(
+                OperandSpec(f"pdf{q}_{dj}", (1, 1, ty, Xp), elem_bytes, grid_deps=(0, 1))
+                for dj in (0, 1)
+                for q in range(15)
+            ) + tuple(
+                OperandSpec(f"phase{k}_{dj}", (1, ty, Xp), elem_bytes, grid_deps=(0, 1))
+                for k in range(3)
+                for dj in (0, 1)
+            ) + (
+                OperandSpec(
+                    "dst", (15, 1, ty, X), elem_bytes, grid_deps=(0, 1), is_output=True
+                ),
+            )
+            yield (
+                {"variant": "ytile", "ty": ty},
+                PallasKernelSpec(
+                    name=f"lbm_ytile{ty}",
+                    grid=(Y // ty, Z),
+                    operands=ops_t,
+                    vpu_elems_per_step=float(FLOPS_PER_LUP * ty * X),
+                    vpu_shape=(ty, X),
+                    work_per_step=float(ty * X),
+                    elem_bytes=elem_bytes,
+                ),
+            )
+        ty *= 2
+
+
+def rank_configs(domain: tuple, machine: TPUMachine = TPU_V5E, elem_bytes: int = 4):
+    return select_pallas_config(candidate_specs(domain, elem_bytes), machine)
+
+
+def generate(domain: tuple, machine: TPUMachine = TPU_V5E, elem_bytes: int = 4, **kw):
+    ranked = rank_configs(domain, machine, elem_bytes)
+    if not ranked:
+        raise RuntimeError("no feasible LBM configuration")
+    best = ranked[0]
+    kern = make_kernel(best.config["variant"], domain, best.config.get("ty"), **kw)
+    return kern, best

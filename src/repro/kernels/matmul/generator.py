@@ -1,0 +1,46 @@
+"""Matmul block-size selection via the analytical estimator."""
+from __future__ import annotations
+
+from repro.core.machines import TPUMachine, TPU_V5E
+from repro.core.tpu_adapt import (
+    MatmulShape,
+    OperandSpec,
+    PallasKernelSpec,
+    pow2_tiles,
+    select_pallas_config,
+)
+
+
+def candidate_specs(M, K, N, elem_bytes=2):
+    for bm in pow2_tiles(128, min(M, 1024)):
+        if M % bm:
+            continue
+        for bn in pow2_tiles(128, min(N, 1024)):
+            if N % bn:
+                continue
+            for bk in pow2_tiles(128, min(K, 2048)):
+                if K % bk:
+                    continue
+                grid = (M // bm, N // bn, K // bk)
+                yield (
+                    {"bm": bm, "bk": bk, "bn": bn},
+                    PallasKernelSpec(
+                        name=f"mm_{bm}x{bk}x{bn}",
+                        grid=grid,
+                        operands=(
+                            OperandSpec("a", (bm, bk), elem_bytes, grid_deps=(0, 2)),
+                            OperandSpec("b", (bk, bn), elem_bytes, grid_deps=(1, 2)),
+                            OperandSpec(
+                                "o", (bm, bn), elem_bytes, grid_deps=(0, 1), is_output=True
+                            ),
+                        ),
+                        matmuls_per_step=(MatmulShape(bm, bk, bn),),
+                        scratch_bytes=bm * bn * 4,
+                        work_per_step=2.0 * bm * bk * bn,
+                        elem_bytes=elem_bytes,
+                    ),
+                )
+
+
+def rank_configs(M, K, N, machine: TPUMachine = TPU_V5E, elem_bytes=2):
+    return select_pallas_config(candidate_specs(M, K, N, elem_bytes), machine)

@@ -1,0 +1,28 @@
+"""Jit'd estimator-tuned matmul with shape-keyed config cache."""
+from __future__ import annotations
+
+import functools
+
+import jax.numpy as jnp
+
+from .generator import rank_configs
+from .kernel import make_matmul
+
+_CONFIG_CACHE: dict = {}
+
+
+def tuned_matmul(a, b, config: dict | None = None):
+    M, K = a.shape
+    K2, N = b.shape
+    assert K == K2
+    if config is None:
+        key = (M, K, N, a.dtype.itemsize)
+        config = _CONFIG_CACHE.get(key)
+        if config is None:
+            ranked = rank_configs(M, K, N, elem_bytes=a.dtype.itemsize)
+            if not ranked:
+                # tiny shapes: no 128-divisible blocking — fall back to XLA
+                return jnp.dot(a, b)
+            config = ranked[0].config
+            _CONFIG_CACHE[key] = config
+    return make_matmul(M, K, N, config["bm"], config["bk"], config["bn"], a.dtype)(a, b)

@@ -1,0 +1,8 @@
+"""Pure-jnp oracle for the blocked matmul kernel."""
+import jax.numpy as jnp
+
+
+def matmul_ref(a, b, out_dtype=None):
+    return jnp.dot(a, b, preferred_element_type=out_dtype or jnp.float32).astype(
+        out_dtype or a.dtype
+    )

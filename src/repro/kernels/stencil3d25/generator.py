@@ -1,0 +1,124 @@
+"""Stencil code generator + estimator coupling (paper fig. 1, on TPU).
+
+``candidate_configs`` enumerates the generator's decision space (variant x
+tile size) and emits, for each candidate, the *address-expression artifact*
+(a PallasKernelSpec) that the estimator prices — before any code exists.
+``generate`` then materializes only the winning kernel.  This mirrors the
+pystencils integration: the generator owns the decisions, the estimator
+ranks them analytically.
+"""
+from __future__ import annotations
+
+import math
+
+from repro.core.machines import TPUMachine, TPU_V5E
+from repro.core.tpu_adapt import (
+    OperandSpec,
+    PallasKernelSpec,
+    RankedPallasConfig,
+    select_pallas_config,
+)
+
+from .kernel import make_kernel
+
+
+def _flops_per_point(r: int) -> float:
+    return float(6 * r + 1) * 2.0  # mul + add per tap
+
+
+def candidate_specs(r: int, domain: tuple, elem_bytes: int = 4):
+    """Yield (config, PallasKernelSpec) for every generator decision."""
+    Z, Y, X = domain
+    Yp, Xp = Y + 2 * r, X + 2 * r
+    Zp = Z + 2 * r
+    fl = _flops_per_point(r)
+
+    # variant A: replane
+    ops_a = tuple(
+        OperandSpec(f"src_p{k}", (1, Yp, Xp), elem_bytes, grid_deps=(0,))
+        for k in range(2 * r + 1)
+    ) + (OperandSpec("dst", (1, Y, X), elem_bytes, grid_deps=(0,), is_output=True),)
+    yield (
+        {"variant": "replane"},
+        PallasKernelSpec(
+            name=f"star{r}_replane",
+            grid=(Z,),
+            operands=ops_a,
+            vpu_elems_per_step=fl * Y * X,
+            vpu_shape=(Y, X),
+            work_per_step=float(Y * X),
+            elem_bytes=elem_bytes,
+        ),
+    )
+
+    # variant B: ring (full planes)
+    nring = 2 * r + 1
+    yield (
+        {"variant": "ring"},
+        PallasKernelSpec(
+            name=f"star{r}_ring",
+            grid=(Zp,),
+            operands=(
+                OperandSpec("src", (1, Yp, Xp), elem_bytes, grid_deps=(0,)),
+                OperandSpec("dst", (1, Y, X), elem_bytes, grid_deps=(0,), is_output=True),
+            ),
+            vpu_elems_per_step=fl * Y * X * Z / Zp,
+            vpu_shape=(Y, X),
+            scratch_bytes=nring * Yp * Xp * elem_bytes,
+            work_per_step=float(Y * X) * Z / Zp,
+            elem_bytes=elem_bytes,
+        ),
+    )
+
+    # variant C: y-tiled ring for each feasible tile size
+    ty = max(2 * r, 8)
+    while ty <= Y // 2:
+        if Y % ty == 0:
+            yield (
+                {"variant": "ytile_ring", "ty": ty},
+                PallasKernelSpec(
+                    name=f"star{r}_ytile{ty}",
+                    grid=(Y // ty, Zp),
+                    operands=(
+                        OperandSpec("src_a", (1, ty, Xp), elem_bytes, grid_deps=(0, 1)),
+                        OperandSpec("src_b", (1, ty, Xp), elem_bytes, grid_deps=(0, 1)),
+                        OperandSpec(
+                            "dst", (1, ty, X), elem_bytes, grid_deps=(0, 1), is_output=True
+                        ),
+                    ),
+                    vpu_elems_per_step=fl * ty * X * Z / Zp,
+                    vpu_shape=(ty, X),
+                    scratch_bytes=nring * 2 * ty * Xp * elem_bytes,
+                    work_per_step=float(ty * X) * Z / Zp,
+                    elem_bytes=elem_bytes,
+                ),
+            )
+        ty *= 2
+
+
+def rank_configs(
+    r: int, domain: tuple, machine: TPUMachine = TPU_V5E, elem_bytes: int = 4
+) -> list[RankedPallasConfig]:
+    return select_pallas_config(candidate_specs(r, domain, elem_bytes), machine)
+
+
+def generate(
+    r: int,
+    domain: tuple,
+    weights,
+    machine: TPUMachine = TPU_V5E,
+    dtype=None,
+    elem_bytes: int = 4,
+):
+    """Pick the best configuration analytically and build that kernel."""
+    import jax.numpy as jnp
+
+    ranked = rank_configs(r, domain, machine, elem_bytes)
+    if not ranked:
+        raise RuntimeError("no feasible stencil configuration for this domain")
+    best = ranked[0]
+    cfg = best.config
+    kern = make_kernel(
+        cfg["variant"], r, domain, weights, dtype or jnp.float32, cfg.get("ty")
+    )
+    return kern, best

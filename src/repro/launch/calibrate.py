@@ -1,0 +1,424 @@
+"""Calibrated per-cell cost accounting for the roofline (DESIGN §2.1).
+
+``compiled.cost_analysis()`` on the CPU backend multiplies only the
+*outermost* while-loop body by its trip count: nested loops (the chunked
+attention / SSM chunk scans inside the layer scan) and the backward scan of
+``value_and_grad`` are counted once (verified by tests/test_costmodel.py).
+A naive read therefore undercounts flops/bytes/collectives of deep models.
+
+Fix: lower ONE layer block (and the embed/head/loss) separately — at that
+granularity every loop is top-level and counted — then scale:
+
+    train:   total = mb * (L * 4 * layer_fwd + 4 * head_fwd) + opt_pass
+    prefill: total = L * layer_fwd + head_fwd
+    decode:  total = L * layer_decode + head_fwd
+
+The 4x train multiplier is the standard fwd + recompute (remat) + dx + dw
+accounting; the optimizer pass adds an analytic 20 B/param f32 read-write
+term.  Collectives scale the same way.  Raw whole-module numbers are kept
+alongside for reference.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ArchConfig, ShapeSpec
+from repro.core.hlo import collective_bytes
+from repro.layers.attention import KVCache, attention_apply
+from repro.layers.mlp import gelu_mlp, swiglu
+from repro.layers.moe import moe_apply
+from repro.layers.norms import rmsnorm
+from repro.layers.ssm import mamba2_apply, rwkv6_apply, rwkv6_channel_mix
+from repro.models import lm as lm_mod
+
+TRAIN_MULT = 4.0  # fwd + remat recompute + dx + dw
+
+
+@dataclass
+class CellCost:
+    flops: float
+    bytes: float
+    coll_wire: float
+    detail: dict
+
+
+def _cost_of(fn, arg_structs, in_shardings, mesh, chunk_hint: int | None = None):
+    """Lower+compile with chunk scans coarsened+unrolled so every loop body
+    is actually counted (cost_analysis counts while bodies once)."""
+    from repro.layers import attention as attn_mod
+    from repro.layers import ssm as ssm_mod
+
+    attn_mod.CHUNK_OVERRIDE[0] = chunk_hint
+    ssm_mod.CHUNK_OVERRIDE[0] = chunk_hint
+    attn_mod.SCAN_UNROLL[0] = True
+    ssm_mod.SCAN_UNROLL[0] = True
+    try:
+        with mesh:
+            jitted = jax.jit(fn, in_shardings=in_shardings)
+            lowered = jitted.lower(*arg_structs)
+            compiled = lowered.compile()
+    finally:
+        attn_mod.CHUNK_OVERRIDE[0] = None
+        ssm_mod.CHUNK_OVERRIDE[0] = None
+        attn_mod.SCAN_UNROLL[0] = False
+        ssm_mod.SCAN_UNROLL[0] = False
+    ca = compiled.cost_analysis()
+    ca = ca[0] if isinstance(ca, (list, tuple)) else ca
+    coll = collective_bytes(compiled.as_text())
+    return (
+        float(ca.get("flops", 0.0)),
+        float(ca.get("bytes accessed", 0.0)),
+        float(coll["total"]["wire_bytes"]),
+    )
+
+
+def _h_sharding(mesh, B, S, seq_parallel=False):
+    """Residual-stream sharding used between blocks (matches models.lm
+    _scan_blocks): batch over data; sequence over model iff seq_parallel."""
+    dp = tuple(a for a in ("pod", "data") if a in mesh.axis_names) or None
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    if dp and B % math.prod(sizes[a] for a in dp) != 0:
+        dp = None
+    tp = None
+    if seq_parallel and "model" in mesh.axis_names and S % sizes.get("model", 1) == 0:
+        tp = "model"
+    return NamedSharding(mesh, P(dp, tp, None))
+
+
+def _dp_sharding(mesh, ndim, dim0=None):
+    """Batch-dim sharding over the data axes; replicates when it doesn't
+    divide (the batch-1 long-context cells)."""
+    dp = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    if dp:
+        sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+        dsz = math.prod(sizes[a] for a in dp)
+        if dim0 is not None and dim0 % dsz != 0:
+            dp = ()
+    return NamedSharding(mesh, P(dp if dp else None, *([None] * (ndim - 1))))
+
+
+def _block_structs(cfg: ArchConfig, B: int, S: int):
+    E = cfg.d_model
+    h = jax.ShapeDtypeStruct((B, S, E), jnp.bfloat16)
+    key = jax.random.PRNGKey(0)
+    if cfg.block_pattern == "attn":
+        lp = jax.eval_shape(lambda k: lm_mod._attn_block_init(k, cfg, jnp.bfloat16), key)
+    elif cfg.block_pattern == "rwkv":
+        lp = jax.eval_shape(lambda k: lm_mod._rwkv_block_init(k, cfg, jnp.bfloat16), key)
+    else:
+        lp = jax.eval_shape(lambda k: lm_mod._mamba_block_init(k, cfg, jnp.bfloat16), key)
+    return lp, h
+
+
+def _layer_fwd_cost(cfg: ArchConfig, mesh, B, S, decode_cache_len: int | None = None,
+                    block: str | None = None):
+    """Cost of one layer block forward (B, S).  decode_cache_len set -> the
+    serving path with a KV/state cache of that length."""
+    from repro.train.sharding import make_param_shardings, make_cache_shardings
+
+    pattern = block or cfg.block_pattern
+    E = cfg.d_model
+    h_struct = jax.ShapeDtypeStruct((B, S, E), jnp.bfloat16)
+    key = jax.random.PRNGKey(0)
+    if pattern == "attn":
+        lp = jax.eval_shape(lambda k: lm_mod._attn_block_init(k, cfg, jnp.bfloat16), key)
+    elif pattern == "rwkv":
+        lp = jax.eval_shape(lambda k: lm_mod._rwkv_block_init(k, cfg, jnp.bfloat16), key)
+    else:
+        lp = jax.eval_shape(lambda k: lm_mod._mamba_block_init(k, cfg, jnp.bfloat16), key)
+    lp_shard = make_param_shardings(lp, mesh)
+    h_shard = _h_sharding(mesh, B, S, cfg.seq_parallel)
+    pos = jax.ShapeDtypeStruct((B, S), jnp.int32)
+    pos_shard = _dp_sharding(mesh, 2, B)
+
+    hint = max(256, -(-S // 8))  # <=8 unrolled chunk-scan steps
+    if decode_cache_len is None:
+        if pattern == "attn":
+            def f(lp, h, positions):
+                out, _ = lm_mod._attn_block(cfg, lp, h, positions, None)
+                return out
+            return _cost_of(f, (lp, h_struct, pos), (lp_shard, h_shard, pos_shard), mesh, hint)
+        if pattern == "rwkv":
+            def f(lp, h):
+                out, _ = lm_mod._rwkv_block(cfg, lp, h, None)
+                return out
+            return _cost_of(f, (lp, h_struct), (lp_shard, h_shard), mesh, hint)
+
+        def f(lp, h):
+            out, _ = lm_mod._mamba_block(cfg, lp, h, None)
+            return out
+        return _cost_of(f, (lp, h_struct), (lp_shard, h_shard), mesh, hint)
+
+    # decode path with cache
+    cap = min(decode_cache_len, cfg.swa_window) if cfg.swa_window else decode_cache_len
+    if pattern == "attn":
+        cache = jax.eval_shape(
+            lambda: KVCache.init(B, cfg.n_kv, cap, cfg.resolved_head_dim)
+        )
+        c_shard = make_cache_shardings(
+            jax.tree.map(lambda x: jax.ShapeDtypeStruct((1,) + x.shape, x.dtype), cache),
+            mesh,
+        )
+        c_shard = jax.tree.map(
+            lambda s: NamedSharding(mesh, P(*s.spec[1:])), c_shard
+        )
+
+        def f(lp, h, positions, cache):
+            out, _ = lm_mod._attn_block(cfg, lp, h, positions, cache)
+            return out
+
+        return _cost_of(
+            f, (lp, h_struct, pos, cache), (lp_shard, h_shard, pos_shard, c_shard), mesh,
+            max(2048, -(-cap // 8)),
+        )
+    if pattern == "rwkv":
+        H = cfg.d_model // cfg.ssm_head_dim
+        from repro.layers.ssm import RWKV6State
+
+        st = jax.eval_shape(
+            lambda: (
+                RWKV6State(
+                    jnp.zeros((B, H, cfg.ssm_head_dim, cfg.ssm_head_dim), jnp.float32),
+                    jnp.zeros((B, E), jnp.bfloat16),
+                ),
+                jnp.zeros((B, E), jnp.bfloat16),
+            )
+        )
+        st_shard = jax.tree.map(lambda x: _dp_sharding(mesh, x.ndim, x.shape[0]), st)
+
+        def f(lp, h, st):
+            out, _ = lm_mod._rwkv_block(cfg, lp, h, st)
+            return out
+
+        return _cost_of(f, (lp, h_struct, st), (lp_shard, h_shard, st_shard), mesh)
+    from repro.layers.ssm import Mamba2State
+
+    d_inner = 2 * cfg.d_model
+    H = d_inner // cfg.ssm_head_dim
+    st = jax.eval_shape(
+        lambda: Mamba2State(
+            jnp.zeros((B, H, cfg.ssm_head_dim, cfg.ssm_state), jnp.float32),
+            jnp.zeros((B, 3, d_inner), jnp.bfloat16),
+        )
+    )
+    st_shard = jax.tree.map(lambda x: _dp_sharding(mesh, x.ndim, x.shape[0]), st)
+
+    def f(lp, h, st):
+        out, _ = lm_mod._mamba_block(cfg, lp, h, st)
+        return out
+
+    return _cost_of(f, (lp, h_struct, st), (lp_shard, h_shard, st_shard), mesh)
+
+
+def _cross_fwd_cost(cfg: ArchConfig, mesh, B, S):
+    """One decoder cross-attention block (enc-dec archs)."""
+    from repro.train.sharding import make_param_shardings
+    from repro.layers.attention import attention_apply, attention_init
+
+    key = jax.random.PRNGKey(0)
+    cp = jax.eval_shape(
+        lambda k: {
+            "ln": lm_mod._norm_init(cfg),
+            "attn": attention_init(k, cfg.d_model, cfg.n_heads, cfg.n_kv,
+                                   cfg.resolved_head_dim, False, jnp.bfloat16),
+        },
+        key,
+    )
+    cp_shard = make_param_shardings(cp, mesh)
+    h = jax.ShapeDtypeStruct((B, S, cfg.d_model), jnp.bfloat16)
+    ctx = jax.ShapeDtypeStruct((B, cfg.frontend_tokens, cfg.d_model), jnp.bfloat16)
+    pos = jax.ShapeDtypeStruct((B, S), jnp.int32)
+    h_sh = _h_sharding(mesh, B, S, cfg.seq_parallel)
+    ctx_sh = _dp_sharding(mesh, 3, B)
+    pos_sh = _dp_sharding(mesh, 2, B)
+
+    def f(cp, h, positions, ctx):
+        out, _ = attention_apply(
+            cp["attn"], lm_mod._norm(cfg, cp["ln"], h),
+            n_heads=cfg.n_heads, n_kv=cfg.n_kv, head_dim=cfg.resolved_head_dim,
+            causal=False, rope_theta=0.0, positions=positions, context=ctx,
+        )
+        return h + out
+
+    return _cost_of(f, (cp, h, pos, ctx), (cp_shard, h_sh, pos_sh, ctx_sh), mesh,
+                    max(256, -(-cfg.frontend_tokens // 4)))
+
+
+def _head_fwd_cost(cfg: ArchConfig, mesh, B, S, with_loss: bool):
+    """embed + final norm + lm_head (+ xent loss)."""
+    from repro.train.sharding import make_param_shardings
+
+    V, E = cfg.padded_vocab, cfg.d_model
+    p = {
+        "embed": jax.ShapeDtypeStruct((V, E), jnp.bfloat16),
+        "lm_head": jax.ShapeDtypeStruct((E, V), jnp.bfloat16),
+        "final_norm": {"scale": jax.ShapeDtypeStruct((E,), jnp.float32)},
+    }
+    p_shard = make_param_shardings(p, mesh)
+    toks = jax.ShapeDtypeStruct((B, S), jnp.int32)
+    t_shard = _dp_sharding(mesh, 2, B)
+
+    def f(p, tokens):
+        from repro.train.sharding import constrain
+        from repro.train.step import xent
+
+        h = constrain(p["embed"][tokens], ("dp", None, None))
+        h = rmsnorm(p["final_norm"], h)
+        if not with_loss:
+            h = h[:, -1:]
+        logits = jnp.einsum("bse,ev->bsv", h, p["lm_head"]).astype(jnp.float32)
+        logits = constrain(logits, ("dp", None, "tp"))
+        if with_loss:
+            return xent(logits, tokens)
+        return logits[:, -1]
+
+    return _cost_of(f, (p, toks), (p_shard, t_shard), mesh)
+
+
+def calibrated_cost(cfg: ArchConfig, shape: ShapeSpec, mesh, microbatches: int = 1,
+                    n_params: float = 0.0) -> CellCost:
+    n_chips = math.prod(mesh.devices.shape)
+    B = shape.global_batch
+    detail = {}
+
+    if shape.kind == "train":
+        B_mb = max(1, B // microbatches)
+        lf = _layer_fwd_cost(cfg, mesh, B_mb, shape.seq_len)
+        hf = _head_fwd_cost(cfg, mesh, B_mb, shape.seq_len, with_loss=True)
+        parts = [(cfg.n_layers, lf)]
+        if cfg.block_pattern == "mamba_hybrid":
+            af = _layer_fwd_cost(cfg, mesh, B_mb, shape.seq_len, block="attn")
+            parts = [(cfg.n_layers, lf),
+                     (cfg.n_layers // cfg.hybrid_attn_every, af)]
+        if cfg.enc_layers:
+            ef = _layer_fwd_cost(cfg, mesh, B_mb, cfg.frontend_tokens, block="attn")
+            parts.append((cfg.enc_layers, ef))
+            parts.append((cfg.n_layers, _cross_fwd_cost(cfg, mesh, B_mb, shape.seq_len)))
+        flops = bts = coll = 0.0
+        for count, (f_, b_, c_) in parts:
+            flops += count * f_
+            bts += count * b_
+            coll += count * c_
+        flops = microbatches * TRAIN_MULT * (flops + hf[0])
+        bts = microbatches * TRAIN_MULT * (bts + hf[1])
+        coll = microbatches * TRAIN_MULT * (coll + hf[2])
+        # optimizer pass: read p,m,v + write p,m,v in f32 (per device)
+        opt_bytes = 20.0 * (n_params / n_chips)
+        bts += opt_bytes
+        detail["opt_bytes"] = opt_bytes
+    elif shape.kind == "prefill":
+        lf = _layer_fwd_cost(cfg, mesh, B, shape.seq_len)
+        hf = _head_fwd_cost(cfg, mesh, B, shape.seq_len, with_loss=False)
+        parts = [(cfg.n_layers, lf)]
+        if cfg.block_pattern == "mamba_hybrid":
+            af = _layer_fwd_cost(cfg, mesh, B, shape.seq_len, block="attn")
+            parts = [(cfg.n_layers, lf),
+                     (cfg.n_layers // cfg.hybrid_attn_every, af)]
+        if cfg.enc_layers:
+            ef = _layer_fwd_cost(cfg, mesh, B, cfg.frontend_tokens, block="attn")
+            parts.append((cfg.enc_layers, ef))
+            parts.append((cfg.n_layers, _cross_fwd_cost(cfg, mesh, B, shape.seq_len)))
+        flops = sum(c * f[0] for c, f in parts) + hf[0]
+        bts = sum(c * f[1] for c, f in parts) + hf[1]
+        coll = sum(c * f[2] for c, f in parts) + hf[2]
+    else:  # decode
+        lf = _layer_fwd_cost(cfg, mesh, B, 1, decode_cache_len=shape.seq_len)
+        hf = _head_fwd_cost(cfg, mesh, B, 1, with_loss=False)
+        parts = [(cfg.n_layers, lf)]
+        if cfg.block_pattern == "mamba_hybrid":
+            af = _layer_fwd_cost(cfg, mesh, B, 1, decode_cache_len=shape.seq_len,
+                                 block="attn")
+            parts = [(cfg.n_layers, lf),
+                     (cfg.n_layers // cfg.hybrid_attn_every, af)]
+        flops = sum(c * f[0] for c, f in parts) + hf[0]
+        bts = sum(c * f[1] for c, f in parts) + hf[1]
+        coll = sum(c * f[2] for c, f in parts) + hf[2]
+
+    detail["layer_fwd"] = lf
+    detail["head_fwd"] = hf
+    return CellCost(flops=flops, bytes=bts, coll_wire=coll, detail=detail)
+
+
+# ===========================================================================
+# Analytic HBM traffic model (the paper's methodology at model level)
+# ===========================================================================
+# The CPU backend's cost_analysis() reports *unfused* byte counts — every
+# elementwise temporary hits "memory" — which a TPU's fusion would keep in
+# VMEM/registers.  Exactly as the paper derives DRAM volumes analytically
+# instead of trusting a naive per-op count, we model per-device HBM traffic
+# from first principles; the unfused number is kept as an upper bound.
+#
+# Model constants (documented assumptions):
+H_PASSES_TRAIN = 30.0   # h-sized HBM touches per layer per mb: fwd ~12 (reads
+                        # + writes at fusion boundaries), remat recompute ~12,
+                        # bwd dx/dw epilogues ~6
+H_PASSES_FWD = 12.0
+LOGIT_PASSES_TRAIN = 4.0  # write + read fwd, write + read bwd (f32)
+LOGIT_PASSES_FWD = 2.0
+PARAM_PASSES_TRAIN = 4.0  # fwd read, recompute read, dw pass read, grad write
+OPT_BYTES_PER_PARAM = 20.0  # p(bf16 r/w) + m,v (f32 r/w)
+
+
+def analytic_bytes(cfg: ArchConfig, shape: ShapeSpec, mesh, microbatches: int,
+                   n_params: float) -> dict:
+    """Per-device HBM bytes per step, first-principles (see constants above)."""
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    chips = math.prod(mesh.devices.shape)
+    tp = sizes.get("model", 1)
+    dp = chips // tp
+    B, S = shape.global_batch, shape.seq_len
+    E, V = cfg.d_model, cfg.padded_vocab
+    L = cfg.n_layers + (cfg.enc_layers or 0)
+    h_bytes = lambda b, s: b * s * E * 2 / dp  # hidden slab per device
+
+    out = {}
+    if shape.kind == "train":
+        mb = microbatches
+        B_mb = max(1, B // mb)
+        # FSDP: gathered layer params are read per pass, sharded 1/tp
+        params_t = mb * PARAM_PASSES_TRAIN * n_params * 2 / tp
+        act_t = mb * L * H_PASSES_TRAIN * h_bytes(B_mb, S)
+        logit_t = mb * LOGIT_PASSES_TRAIN * B_mb * S * V * 4 / (dp * tp)
+        opt_t = OPT_BYTES_PER_PARAM * n_params / chips
+        out = {"params": params_t, "activations": act_t, "logits": logit_t,
+               "optimizer": opt_t}
+    elif shape.kind == "prefill":
+        params_t = n_params * 2 / tp
+        act_t = L * H_PASSES_FWD * h_bytes(B, S)
+        logit_t = LOGIT_PASSES_FWD * B * 1 * V * 4 / (dp * tp)  # last_only
+        cache_t = 0.0
+        if cfg.block_pattern in ("attn", "mamba_hybrid"):
+            n_attn = (cfg.n_layers if cfg.block_pattern == "attn"
+                      else cfg.n_layers // cfg.hybrid_attn_every)
+            cap = min(S, cfg.swa_window) if cfg.swa_window else S
+            cache_t = n_attn * 2 * B * cfg.n_kv * cap * cfg.resolved_head_dim * 2 / dp
+        out = {"params": params_t, "activations": act_t, "logits": logit_t,
+               "kv_cache_write": cache_t}
+    else:  # decode
+        params_t = n_params * 2 / tp  # every param read once per token
+        act_t = L * H_PASSES_FWD * h_bytes(B, 1)
+        logit_t = LOGIT_PASSES_FWD * B * V * 4 / (dp * tp)
+        cache_t = 0.0
+        if cfg.block_pattern in ("attn", "mamba_hybrid"):
+            n_attn = (cfg.n_layers if cfg.block_pattern == "attn"
+                      else cfg.n_layers // cfg.hybrid_attn_every)
+            cap = min(S, cfg.swa_window) if cfg.swa_window else S
+            kv_heads_shard = max(1, min(tp, cfg.n_kv))
+            cache_t = n_attn * 2 * B * cfg.n_kv * cap * cfg.resolved_head_dim * 2 / (
+                dp * kv_heads_shard
+            )
+        if cfg.block_pattern == "rwkv":
+            H = cfg.d_model // cfg.ssm_head_dim
+            cache_t = cfg.n_layers * 2 * B * H * cfg.ssm_head_dim ** 2 * 4 / dp
+        if cfg.block_pattern == "mamba_hybrid":
+            Hm = 2 * cfg.d_model // cfg.ssm_head_dim
+            cache_t += cfg.n_layers * 2 * B * Hm * cfg.ssm_head_dim * cfg.ssm_state * 4 / dp
+        out = {"params": params_t, "activations": act_t, "logits": logit_t,
+               "state_cache": cache_t}
+    out["total"] = sum(out.values())
+    return out

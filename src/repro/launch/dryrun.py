@@ -1,0 +1,435 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run (deliverable e).
+
+Lowers + compiles every (architecture x input shape x mesh) cell with
+ShapeDtypeStruct stand-ins — no allocation — and records memory analysis,
+cost analysis, and the collective schedule for the roofline (deliverable g).
+
+    PYTHONPATH=src python -m repro.launch.dryrun --arch qwen1.5-32b \
+        --shape train_4k [--multi-pod] [--out out.json]
+    PYTHONPATH=src python -m repro.launch.dryrun --all  # orchestrates
+                                                        # subprocesses
+
+The XLA_FLAGS line above MUST precede any jax import: the dry-run (and only
+the dry-run) needs 512 placeholder host devices for the production mesh.
+"""
+import argparse
+import json
+import math
+import subprocess
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import SHAPES, get_config, valid_cells
+from repro.configs.base import ArchConfig, ShapeSpec
+from repro.launch.mesh import make_production_mesh
+from repro.models.lm import forward, init_caches, init_params
+from repro.optim.adamw import OptConfig, init_opt_state
+from repro.train.sharding import (
+    make_batch_shardings,
+    make_cache_shardings,
+    make_param_shardings,
+    set_activation_axes,
+)
+from repro.train.step import make_decode_step, make_train_step
+
+
+def struct_like(f, *args, **kw):
+    return jax.eval_shape(f, *args, **kw)
+
+
+def params_struct(cfg: ArchConfig):
+    return jax.eval_shape(lambda k: init_params(cfg, k), jax.random.PRNGKey(0))
+
+
+def count_params(p_struct) -> tuple:
+    """(total, active) param counts; active discounts inactive MoE experts."""
+    total = active = 0
+    for path, leaf in jax.tree_util.tree_flatten_with_path(p_struct)[0]:
+        names = [str(getattr(k, "key", getattr(k, "name", k))) for k in path]
+        n = math.prod(leaf.shape)
+        total += n
+        if leaf.ndim >= 3 and names[-1] in ("w_gate", "w_up", "w_down") and "moe" in names:
+            n_exp = leaf.shape[-3]
+            active += n  # corrected by caller with top_k/n_exp
+        else:
+            active += n
+    return total, active
+
+
+def model_flops(cfg: ArchConfig, shape: ShapeSpec, p_struct) -> float:
+    """Useful FLOPs per step: 6*N_active*tokens (train) / 2*N_active*tokens
+    (inference) + the causal-attention term."""
+    total = 0
+    expert = 0
+    for path, leaf in jax.tree_util.tree_flatten_with_path(p_struct)[0]:
+        names = [str(getattr(k, "key", getattr(k, "name", k))) for k in path]
+        n = math.prod(leaf.shape)
+        total += n
+        if leaf.ndim >= 3 and names[-1] in ("w_gate", "w_up", "w_down") and any(
+            "moe" in s for s in names
+        ):
+            expert += n
+    n_active = total - expert + (expert * cfg.top_k / max(cfg.n_experts, 1))
+    if cfg.enc_layers:
+        # enc-dec: encoder params see frontend frames, not decoder tokens —
+        # weight the per-token count by each stack's share of active params
+        enc_frac = cfg.enc_layers / (cfg.enc_layers + cfg.n_layers)
+        frame_ratio = cfg.frontend_tokens / max(shape.seq_len, 1)
+        n_active = n_active * ((1 - enc_frac) + enc_frac * frame_ratio)
+    if shape.kind == "train":
+        tokens = shape.seq_len * shape.global_batch
+        mult = 6.0
+        attn_ctx = shape.seq_len
+    elif shape.kind == "prefill":
+        tokens = shape.seq_len * shape.global_batch
+        mult = 2.0
+        attn_ctx = shape.seq_len
+    else:  # decode
+        tokens = shape.global_batch
+        mult = 2.0
+        attn_ctx = min(shape.seq_len, cfg.swa_window or shape.seq_len)
+    flops = mult * n_active * tokens
+    if cfg.block_pattern == "attn" or cfg.block_pattern == "mamba_hybrid":
+        n_attn = (
+            cfg.n_layers
+            if cfg.block_pattern == "attn"
+            else cfg.n_layers // cfg.hybrid_attn_every
+        )
+        hd = cfg.resolved_head_dim
+        # q@k + p@v, causal halves it; train adds backward (x3)
+        att = 2.0 * tokens * attn_ctx * cfg.n_heads * hd * 2 * n_attn * 0.5
+        flops += att * (3.0 if shape.kind == "train" else 1.0)
+    return flops
+
+
+def batch_struct(cfg: ArchConfig, shape: ShapeSpec):
+    B, S = shape.global_batch, shape.seq_len
+    out = {
+        "tokens": jax.ShapeDtypeStruct((B, S), jnp.int32),
+        "labels": jax.ShapeDtypeStruct((B, S), jnp.int32),
+    }
+    if cfg.frontend:
+        out["frontend"] = jax.ShapeDtypeStruct(
+            (B, cfg.frontend_tokens, cfg.frontend_dim), jnp.float32
+        )
+    return out
+
+
+def input_specs(arch: str, shape_name: str):
+    """Public entry: ShapeDtypeStruct stand-ins for every model input of the
+    given cell (the pattern shannon/kernels uses: weak-type-correct,
+    shardable, no device allocation)."""
+    return cell_input_specs(get_config(arch), SHAPES[shape_name])
+
+
+def cell_input_specs(cfg: ArchConfig, shape: ShapeSpec):
+    if shape.kind == "train":
+        return batch_struct(cfg, shape)
+    if shape.kind == "prefill":
+        bs = batch_struct(cfg, shape)
+        bs.pop("labels")
+        return bs
+    # decode: one new token against a full cache
+    B = shape.global_batch
+    caches = jax.eval_shape(
+        lambda: init_caches(cfg, B, min(shape.seq_len, cfg.swa_window or shape.seq_len))
+    )
+    out = {
+        "token": jax.ShapeDtypeStruct((B, 1), jnp.int32),
+        "positions": jax.ShapeDtypeStruct((B, 1), jnp.int32),
+        "caches": caches,
+    }
+    if cfg.enc_layers:
+        out["encoder_out"] = jax.ShapeDtypeStruct(
+            (B, cfg.frontend_tokens, cfg.d_model), jnp.bfloat16
+        )
+    return out
+
+
+def lower_cell(arch: str, shape_name: str, multi_pod: bool) -> dict:
+    import dataclasses
+
+    from repro.core.roofline import analyze_compiled
+
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    kv_int8 = False
+    if shape.kind in ("decode", "long_decode") and cfg.block_pattern in (
+        "attn", "mamba_hybrid"
+    ):
+        cap = min(shape.seq_len, cfg.swa_window) if cfg.swa_window else shape.seq_len
+        n_attn = (cfg.n_layers if cfg.block_pattern == "attn"
+                  else cfg.n_layers // cfg.hybrid_attn_every)
+        cache_gb = (n_attn * 2 * shape.global_batch * cfg.n_kv * cap
+                    * cfg.resolved_head_dim * 2) / 512 / 1e9
+        if cache_gb > 8.0:  # bf16 cache alone would crowd a 16GB chip
+            kv_int8 = True
+            cfg = dataclasses.replace(cfg, kv_int8=True)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    set_activation_axes(mesh)
+    n_chips = math.prod(mesh.devices.shape)
+    p_struct = params_struct(cfg)
+    p_shard = make_param_shardings(p_struct, mesh)
+    t0 = time.time()
+
+    if shape.kind == "train":
+        opt_struct = jax.eval_shape(lambda: init_opt_state(OptConfig(), p_struct))
+        # m/v mirror params; scalars replicated
+        from jax.sharding import NamedSharding, PartitionSpec as P
+
+        rep = NamedSharding(mesh, P())
+        opt_shard = type(opt_struct)(
+            step=rep,
+            m=make_param_shardings(opt_struct.m, mesh),
+            v=make_param_shardings(opt_struct.v, mesh),
+            error=None,
+        )
+        b_struct = batch_struct(cfg, shape)
+        b_shard = make_batch_shardings(b_struct, mesh)
+        # microbatch so the per-device microbatch is ~1: bounds activation
+        # memory (gradient accumulation overlaps the reduction)
+        dp = 1
+        for a in ("pod", "data"):
+            if a in mesh.axis_names:
+                dp *= dict(zip(mesh.axis_names, mesh.devices.shape))[a]
+        mb = max(1, min(8, shape.global_batch // dp))
+        if cfg.n_experts:
+            # MoE: FSDP expert-weight gathers repeat per microbatch; fewer,
+            # larger microbatches trade activation memory for collective wire
+            mb = max(1, min(4, mb))
+        step_fn = make_train_step(cfg, OptConfig(), microbatches=mb)
+        jitted = jax.jit(
+            step_fn,
+            in_shardings=(p_shard, opt_shard, b_shard),
+            donate_argnums=(0, 1),
+        )
+        with mesh:
+            lowered = jitted.lower(p_struct, opt_struct, b_struct)
+            compiled = lowered.compile()
+    elif shape.kind == "prefill":
+        from repro.train.step import make_prefill_step
+
+        cap = shape.seq_len if not cfg.swa_window else min(shape.seq_len, cfg.swa_window)
+        bs = batch_struct(cfg, shape)
+        prefill = make_prefill_step(cfg, cap)
+        tok_shard = make_batch_shardings(
+            {"tokens": bs["tokens"]}, mesh,
+            shard_seq=(shape.global_batch == 1),
+        )["tokens"]
+        args = [bs["tokens"]]
+        in_sh = [tok_shard]
+        if cfg.frontend:
+            fe_shard = make_batch_shardings({"f": bs["frontend"]}, mesh)["f"]
+            args.append(bs["frontend"])
+            in_sh.append(fe_shard)
+        jitted = jax.jit(
+            prefill, in_shardings=(p_shard, *in_sh),
+        )
+        with mesh:
+            lowered = jitted.lower(p_struct, *args)
+            compiled = lowered.compile()
+    else:  # decode / long_decode
+        spec = cell_input_specs(cfg, shape)
+        cache_shard = make_cache_shardings(spec["caches"], mesh)
+        tok_shard = make_batch_shardings({"t": spec["token"]}, mesh)["t"]
+        pos_shard = make_batch_shardings({"p": spec["positions"]}, mesh)["p"]
+        decode = make_decode_step(cfg)
+        args = [spec["token"], spec["caches"], spec["positions"]]
+        in_sh = [tok_shard, cache_shard, pos_shard]
+        if cfg.enc_layers:
+            enc_shard = make_batch_shardings({"e": spec["encoder_out"]}, mesh)["e"]
+            args.append(spec["encoder_out"])
+            in_sh.append(enc_shard)
+        jitted = jax.jit(
+            decode, in_shardings=(p_shard, *in_sh), donate_argnums=(2,)
+        )
+        with mesh:
+            lowered = jitted.lower(p_struct, *args)
+            compiled = lowered.compile()
+
+    compile_s = time.time() - t0
+    mf = model_flops(cfg, shape, p_struct)
+
+    # raw whole-module analysis (memory proof + collective schedule record)
+    raw = analyze_compiled(
+        f"{arch}/{shape_name}/{'2x16x16' if multi_pod else '16x16'}",
+        compiled,
+        n_chips,
+        model_flops_total=mf,
+    )
+    mem = raw.detail.get("memory_analysis", {})
+    print(f"memory_analysis: {mem}")
+    print(f"cost_analysis(raw): flops={raw.flops:.3e} bytes={raw.hbm_bytes:.3e}")
+
+    # calibrated per-layer accounting (see launch/calibrate.py docstring)
+    from repro.core.roofline import report_from_values
+    from repro.launch.calibrate import calibrated_cost
+
+    n_params = sum(math.prod(l.shape) for l in jax.tree.leaves(p_struct))
+    mb_used = 1
+    if shape.kind == "train":
+        dp = 1
+        for a in ("pod", "data"):
+            if a in mesh.axis_names:
+                dp *= dict(zip(mesh.axis_names, mesh.devices.shape))[a]
+        mb_used = max(1, min(8, shape.global_batch // dp))
+        if cfg.n_experts:
+            mb_used = max(1, min(4, mb_used))
+    cc = calibrated_cost(cfg, shape, mesh, microbatches=mb_used, n_params=n_params)
+    from repro.launch.calibrate import analytic_bytes
+
+    ab = analytic_bytes(cfg, shape, mesh, mb_used, n_params)
+    report = report_from_values(
+        raw.name,
+        flops=cc.flops,
+        hbm_bytes=ab["total"],
+        coll_wire_bytes=cc.coll_wire + raw.coll_wire_bytes,
+        n_chips=n_chips,
+        model_flops_total=mf,
+        peak_bytes_per_device=mem.get("peak_bytes", 0),
+    )
+    row = report.row()
+    row.update(
+        {
+            "arch": arch,
+            "shape": shape_name,
+            "mesh": "2x16x16" if multi_pod else "16x16",
+            "compile_s": compile_s,
+            "model_flops": mf,
+            "n_params": n_params,
+            "kv_int8": kv_int8,
+            "raw_cost_analysis": {
+                "flops": raw.flops,
+                "hbm_bytes": raw.hbm_bytes,
+                "coll_wire_bytes": raw.coll_wire_bytes,
+            },
+            "calibrated_unfused_bytes": cc.bytes,
+            "analytic_bytes": {k: float(v) for k, v in ab.items()},
+            "collectives": {
+                k: {kk: float(vv) for kk, vv in v.items()}
+                for k, v in raw.detail["collectives"].items()
+            },
+            "memory": {k: int(v) for k, v in mem.items()},
+        }
+    )
+    return row
+
+
+ALL_ARCHS = [
+    "rwkv6-1.6b", "qwen1.5-32b", "phi3-mini-3.8b", "qwen1.5-110b",
+    "granite-3-2b", "whisper-base", "zamba2-2.7b", "internvl2-76b",
+    "mixtral-8x7b", "arctic-480b",
+]
+
+
+def all_cells():
+    for arch in ALL_ARCHS:
+        cfg = get_config(arch)
+        for s in valid_cells(cfg):
+            yield arch, s.name
+
+
+def orchestrate(out_dir: str, jobs: int, multi_pod_list=(False, True),
+                timeout: int = 3600):
+    os.makedirs(out_dir, exist_ok=True)
+    tasks = []
+    for arch, shape in all_cells():
+        for mp in multi_pod_list:
+            name = f"{arch}__{shape}__{'mp' if mp else 'sp'}"
+            out = os.path.join(out_dir, name + ".json")
+            if os.path.exists(out):
+                continue
+            cmd = [
+                sys.executable, "-m", "repro.launch.dryrun",
+                "--arch", arch, "--shape", shape, "--out", out,
+            ] + (["--multi-pod"] if mp else [])
+            tasks.append((name, cmd))
+    procs: list = []
+    results = {}
+    while tasks or procs:
+        while tasks and len(procs) < jobs:
+            name, cmd = tasks.pop(0)
+            log = open(os.path.join(out_dir, name + ".log"), "w")
+            p = subprocess.Popen(cmd, stdout=log, stderr=subprocess.STDOUT,
+                                 env={**os.environ, "PYTHONPATH": "src"})
+            procs.append((name, p, time.time(), log))
+            print(f"[dryrun] start {name} ({len(tasks)} queued)")
+        for item in list(procs):
+            name, p, t0, log = item
+            rc = p.poll()
+            if rc is None and time.time() - t0 > timeout:
+                p.kill()
+                rc = -9
+            if rc is not None:
+                procs.remove(item)
+                log.close()
+                results[name] = rc
+                print(f"[dryrun] done {name} rc={rc} ({time.time()-t0:.0f}s)")
+        time.sleep(2)
+    failed = {k: v for k, v in results.items() if v != 0}
+    print(f"[dryrun] finished: {len(results) - len(failed)} ok, {len(failed)} failed")
+    for k in failed:
+        print("  FAILED:", k)
+    return failed
+
+
+def sweep_arch(arch: str, out_dir: str):
+    """Run every (shape x mesh) cell of one arch in-process (amortizes the
+    ~20s jax import on single-core hosts); one JSON per cell."""
+    os.makedirs(out_dir, exist_ok=True)
+    cfg = get_config(arch)
+    failed = []
+    for s in valid_cells(cfg):
+        for mp in (False, True):
+            name = f"{arch}__{s.name}__{'mp' if mp else 'sp'}"
+            out = os.path.join(out_dir, name + ".json")
+            if os.path.exists(out):
+                continue
+            t0 = time.time()
+            try:
+                row = lower_cell(arch, s.name, mp)
+                with open(out, "w") as f:
+                    json.dump(row, f, indent=1)
+                print(f"[sweep] {name} OK ({time.time()-t0:.0f}s)", flush=True)
+            except Exception as e:  # noqa: BLE001 — record and continue
+                failed.append((name, repr(e)))
+                with open(os.path.join(out_dir, name + ".FAILED"), "w") as f:
+                    import traceback
+
+                    f.write(traceback.format_exc())
+                print(f"[sweep] {name} FAILED: {e!r}", flush=True)
+    return failed
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--out")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--sweep", action="store_true", help="all cells of --arch")
+    ap.add_argument("--jobs", type=int, default=4)
+    ap.add_argument("--out-dir", default="experiments/dryrun")
+    args = ap.parse_args()
+    if args.sweep:
+        failed = sweep_arch(args.arch, args.out_dir)
+        sys.exit(1 if failed else 0)
+    if args.all:
+        failed = orchestrate(args.out_dir, args.jobs)
+        sys.exit(1 if failed else 0)
+    row = lower_cell(args.arch, args.shape, args.multi_pod)
+    print(json.dumps({k: v for k, v in row.items() if k != "collectives"}, indent=1))
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump(row, f, indent=1)
+
+
+if __name__ == "__main__":
+    main()

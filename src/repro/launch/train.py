@@ -1,0 +1,117 @@
+"""Production training launcher.
+
+Builds the mesh, shards params/optimizer/batches with the framework rules,
+runs the jit'd train step with gradient accumulation, heartbeats the failure
+detector, checkpoints asynchronously, and executes recovery plans (elastic
+re-mesh from the latest checkpoint) — the single-host path of the flow that
+runs per-host on a real cluster.
+
+    PYTHONPATH=src python -m repro.launch.train --arch granite-3-2b \
+        --reduced --steps 100 [--mesh 1x1]
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.checkpoint.ckpt import latest_step, prune, restore, save
+from repro.configs import get_config
+from repro.data.pipeline import DataConfig, ShardedBatchIterator
+from repro.launch.mesh import make_mesh
+from repro.models.lm import init_params
+from repro.optim.adamw import OptConfig, init_opt_state
+from repro.runtime.fault import FailureDetector, StragglerTracker, plan_recovery
+from repro.train.sharding import (
+    make_batch_shardings,
+    make_param_shardings,
+    set_activation_axes,
+)
+from repro.train.step import make_train_step
+
+
+def parse_mesh(s: str):
+    dims = tuple(int(x) for x in s.split("x"))
+    axes = {1: ("data",), 2: ("data", "model"), 3: ("pod", "data", "model")}[len(dims)]
+    return make_mesh(dims, axes)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="granite-3-2b")
+    ap.add_argument("--reduced", action="store_true",
+                    help="reduced config (CPU-sized)")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--global-batch", type=int, default=8)
+    ap.add_argument("--seq-len", type=int, default=64)
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--mesh", default="1x1")
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_train_ckpt")
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--compress-grads", action="store_true")
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced()
+    mesh = parse_mesh(args.mesh)
+    set_activation_axes(mesh)
+    opt_cfg = OptConfig(lr=1e-3, warmup_steps=20, total_steps=args.steps,
+                        compress_grads=args.compress_grads)
+    dc = DataConfig(vocab=cfg.vocab, seq_len=args.seq_len,
+                    global_batch=args.global_batch,
+                    frontend_tokens=cfg.frontend_tokens if cfg.frontend else 0,
+                    frontend_dim=cfg.frontend_dim if cfg.frontend else 0)
+
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    opt = init_opt_state(opt_cfg, params)
+    p_shard = make_param_shardings(params, mesh)
+    params = jax.device_put(params, p_shard)
+    start = 0
+    got, step0 = restore(args.ckpt_dir, {"params": params, "opt": opt})
+    if got is not None:
+        params = jax.device_put(jax.tree.map(jnp.asarray, got["params"]), p_shard)
+        opt = type(opt)(*[jnp.asarray(x) if x is not None else None for x in got["opt"]])
+        start = step0
+        print(f"[train] resumed from step {start}")
+
+    step_fn = jax.jit(make_train_step(cfg, opt_cfg, microbatches=args.microbatches),
+                      donate_argnums=(0, 1))
+    it = ShardedBatchIterator(dc, start_step=start)
+    detector = FailureDetector(n_hosts=jax.process_count())
+    tracker = StragglerTracker(n_hosts=jax.process_count())
+
+    t_last = time.time()
+    with mesh:
+        for _ in range(start, args.steps):
+            step, batch = next(it)
+            b_shard = make_batch_shardings(
+                jax.tree.map(lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), batch),
+                mesh,
+            )
+            batch = jax.tree.map(lambda x, s: jax.device_put(jnp.asarray(x), s),
+                                 batch, b_shard)
+            params, opt, metrics = step_fn(params, opt, batch)
+            dt = time.time() - t_last
+            t_last = time.time()
+            detector.heartbeat(jax.process_index())
+            tracker.record(jax.process_index(), dt)
+            plan = plan_recovery(detector, tracker, chips_per_host=jax.local_device_count(),
+                                 model_parallel=1, latest_ckpt_step=latest_step(args.ckpt_dir))
+            if plan.action != "continue":
+                print(f"[train] recovery plan: {plan}")
+            if step % 10 == 0 or step == args.steps - 1:
+                print(f"[train] step {step:5d} loss {float(metrics['loss']):.4f} "
+                      f"gnorm {float(metrics['grad_norm']):.3f} {dt*1e3:.0f} ms")
+            if step > 0 and step % args.ckpt_every == 0:
+                save(args.ckpt_dir, step, {"params": params, "opt": opt}, blocking=False)
+                prune(args.ckpt_dir, keep=2)
+    it.close()
+    save(args.ckpt_dir, args.steps, {"params": params, "opt": opt})
+    print(f"[train] done at step {args.steps}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,268 @@
+"""GQA attention: chunked-flash jnp path (shardable, O(S) memory) + optional
+Pallas kernel path, KV caches (full or sliding-window ring) for serving.
+
+The chunked jnp implementation is the model-level default: it lowers to a
+lax.scan over KV blocks (compiles small, shards over heads/batch, and is the
+sub-quadratic-memory path the 32k/500k shapes need).  The Pallas kernel in
+``repro.kernels.flash_attention`` is the TPU hot-spot deployment of the same
+algorithm, validated against the same oracle.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.train.sharding import gather_weight
+
+from .rope import apply_rope
+
+NEG_INF = -1e30
+
+# calibration hooks (launch/calibrate.py): cost_analysis() counts while-loop
+# bodies once, so calibration lowers with few, unrolled chunk steps
+CHUNK_OVERRIDE = [None]
+SCAN_UNROLL = [False]
+
+
+def attention_init(key, d_model, n_heads, n_kv, head_dim, qkv_bias=False,
+                   dtype=jnp.bfloat16):
+    ks = jax.random.split(key, 4)
+    s = d_model ** -0.5
+    p = {
+        "wq": (jax.random.normal(ks[0], (d_model, n_heads * head_dim)) * s).astype(dtype),
+        "wk": (jax.random.normal(ks[1], (d_model, n_kv * head_dim)) * s).astype(dtype),
+        "wv": (jax.random.normal(ks[2], (d_model, n_kv * head_dim)) * s).astype(dtype),
+        "wo": (jax.random.normal(ks[3], (n_heads * head_dim, d_model))
+               * (n_heads * head_dim) ** -0.5).astype(dtype),
+    }
+    if qkv_bias:
+        p["bq"] = jnp.zeros((n_heads * head_dim,), dtype)
+        p["bk"] = jnp.zeros((n_kv * head_dim,), dtype)
+        p["bv"] = jnp.zeros((n_kv * head_dim,), dtype)
+    return p
+
+
+def chunked_attention(q, k, v, *, causal=True, window=None, q_positions=None,
+                      k_positions=None, chunk=1024):
+    """Online-softmax attention scanned over KV chunks.
+
+    q: (B, Hq, Sq, D);  k/v: (B, Hkv, Skv, D).
+    positions: absolute positions (B, S) or (S,); invalid cache slots carry
+    position -1 and are masked out.
+    """
+    B, Hq, Sq, D = q.shape
+    Hkv, Skv = k.shape[1], k.shape[2]
+    group = Hq // Hkv
+    scale = D ** -0.5
+    if q_positions is None:
+        q_positions = jnp.arange(Sq) + (Skv - Sq)
+    if k_positions is None:
+        k_positions = jnp.arange(Skv)
+    q_positions = jnp.broadcast_to(q_positions, (B, Sq)) if q_positions.ndim == 1 else q_positions
+    k_positions = jnp.broadcast_to(k_positions, (B, Skv)) if k_positions.ndim == 1 else k_positions
+
+    if Sq <= 4:
+        # decode: scores are (B,H,Sq,Skv) — small enough to do in one pass,
+        # and the single einsum lets SPMD keep the KV cache sequence-sharded
+        # (partial softmax stats reduce over the model axis); the chunk scan
+        # would force gather/reshape of the sharded cache.
+        from repro.train.sharding import constrain
+
+        qf = q.astype(jnp.float32).reshape(B, Hkv, group, Sq, D)
+        s = jnp.einsum("bhgqd,bhkd->bhgqk", qf, k.astype(jnp.float32)) * scale
+        valid = k_positions[:, None, None, None, :] >= 0
+        if causal:
+            valid &= (
+                k_positions[:, None, None, None, :]
+                <= q_positions[:, None, None, :, None]
+            )
+        if window is not None:
+            valid &= (
+                q_positions[:, None, None, :, None]
+                - k_positions[:, None, None, None, :]
+            ) < window
+        s = jnp.where(valid, s, NEG_INF)
+        from repro.train.sharding import _ACT
+
+        tp_size = _ACT.get("tp_size", 1)
+        # heads over model when divisible, else sequence over model
+        # (flash-decoding-style: softmax stats reduce across shards)
+        tags = ("dp", "tp", None, None) if Hq % tp_size == 0 else ("dp", None, None, "tp")
+        s = constrain(s.reshape(B, Hq, Sq, Skv), tags).reshape(
+            B, Hkv, group, Sq, Skv
+        )
+        p = jax.nn.softmax(s, axis=-1)
+        out = jnp.einsum("bhgqk,bhkd->bhgqd", p, v.astype(jnp.float32))
+        return out.reshape(B, Hq, Sq, D).astype(q.dtype)
+
+    chunk = CHUNK_OVERRIDE[0] or chunk
+    chunk = min(chunk, Skv)
+    nchunks = -(-Skv // chunk)
+    pad = nchunks * chunk - Skv
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        k_positions = jnp.pad(k_positions, ((0, 0), (0, pad)), constant_values=-1)
+
+    qf = q.astype(jnp.float32).reshape(B, Hkv, group, Sq, D)
+    kc = k.astype(jnp.float32).reshape(B, Hkv, nchunks, chunk, D).transpose(2, 0, 1, 3, 4)
+    vc = v.astype(jnp.float32).reshape(B, Hkv, nchunks, chunk, D).transpose(2, 0, 1, 3, 4)
+    kp = k_positions.reshape(B, nchunks, chunk).transpose(1, 0, 2)
+
+    def step(carry, xs):
+        m, l, acc = carry
+        kb, vb, kpos = xs
+        s = jnp.einsum("bhgqd,bhkd->bhgqk", qf, kb) * scale
+        valid = kpos[:, None, None, None, :] >= 0
+        if causal:
+            valid &= kpos[:, None, None, None, :] <= q_positions[:, None, None, :, None]
+        if window is not None:
+            valid &= (
+                q_positions[:, None, None, :, None] - kpos[:, None, None, None, :]
+            ) < window
+        s = jnp.where(valid, s, NEG_INF)
+        m_new = jnp.maximum(m, s.max(axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + p.sum(axis=-1)
+        acc_new = acc * corr[..., None] + jnp.einsum("bhgqk,bhkd->bhgqd", p, vb)
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((B, Hkv, group, Sq), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((B, Hkv, group, Sq), jnp.float32)
+    a0 = jnp.zeros((B, Hkv, group, Sq, D), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(step, (m0, l0, a0), (kc, vc, kp),
+                                  unroll=bool(SCAN_UNROLL[0]))
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    return out.reshape(B, Hq, Sq, D).astype(q.dtype)
+
+
+class KVCache(NamedTuple):
+    k: jax.Array          # (B, Hkv, C, D) — bf16 or int8 (quantized)
+    v: jax.Array
+    positions: jax.Array  # (B, C) absolute positions, -1 = empty
+    cursor: jax.Array     # (B,) next write slot (ring) / length (full)
+    k_scale: jax.Array | None = None  # (B, Hkv, C) f32 per-token-head scales
+    v_scale: jax.Array | None = None
+
+    @property
+    def quantized(self) -> bool:
+        return self.k_scale is not None
+
+    @staticmethod
+    def init(batch, n_kv, capacity, head_dim, dtype=jnp.bfloat16,
+             quantized: bool = False):
+        """``quantized=True``: int8 storage with per-(token, head) symmetric
+        scales — halves HBM vs bf16 (the capacity enabler for MHA-KV archs
+        like qwen1.5-32b at 32k, see EXPERIMENTS §Perf)."""
+        store = jnp.int8 if quantized else dtype
+        return KVCache(
+            k=jnp.zeros((batch, n_kv, capacity, head_dim), store),
+            v=jnp.zeros((batch, n_kv, capacity, head_dim), store),
+            positions=jnp.full((batch, capacity), -1, jnp.int32),
+            cursor=jnp.zeros((batch,), jnp.int32),
+            k_scale=jnp.zeros((batch, n_kv, capacity), jnp.float32) if quantized else None,
+            v_scale=jnp.zeros((batch, n_kv, capacity), jnp.float32) if quantized else None,
+        )
+
+    def dequant(self):
+        """Materialize bf16 views (fused into consumers under jit)."""
+        if not self.quantized:
+            return self.k, self.v
+        k = self.k.astype(jnp.float32) * self.k_scale[..., None]
+        v = self.v.astype(jnp.float32) * self.v_scale[..., None]
+        return k.astype(jnp.bfloat16), v.astype(jnp.bfloat16)
+
+    def append(self, k_new, v_new, pos_new):
+        """Append Sq new entries at the (ring) cursor.  k_new: (B,Hkv,Sq,D),
+        pos_new: (B, Sq)."""
+        B, Hkv, Sq, D = k_new.shape
+        C = self.k.shape[2]
+        idx = (self.cursor[:, None] + jnp.arange(Sq)[None, :]) % C  # (B, Sq)
+        bidx = jnp.arange(B)[:, None]
+        if self.quantized:
+            ks = jnp.max(jnp.abs(k_new.astype(jnp.float32)), axis=-1) / 127.0
+            vs = jnp.max(jnp.abs(v_new.astype(jnp.float32)), axis=-1) / 127.0
+            kq = jnp.round(k_new.astype(jnp.float32) / jnp.maximum(ks, 1e-8)[..., None])
+            vq = jnp.round(v_new.astype(jnp.float32) / jnp.maximum(vs, 1e-8)[..., None])
+            k = self.k.at[bidx, :, idx].set(
+                kq.transpose(0, 2, 1, 3).astype(jnp.int8))
+            v = self.v.at[bidx, :, idx].set(
+                vq.transpose(0, 2, 1, 3).astype(jnp.int8))
+            k_scale = self.k_scale.at[bidx, :, idx].set(ks.transpose(0, 2, 1))
+            v_scale = self.v_scale.at[bidx, :, idx].set(vs.transpose(0, 2, 1))
+            positions = self.positions.at[bidx, idx].set(pos_new)
+            return KVCache(k, v, positions, self.cursor + Sq, k_scale, v_scale)
+        k = self.k.at[bidx, :, idx].set(k_new.transpose(0, 2, 1, 3).astype(self.k.dtype))
+        v = self.v.at[bidx, :, idx].set(v_new.transpose(0, 2, 1, 3).astype(self.v.dtype))
+        positions = self.positions.at[bidx, idx].set(pos_new)
+        return KVCache(k, v, positions, self.cursor + Sq, None, None)
+
+
+def attention_apply(params, x, *, n_heads, n_kv, head_dim, causal=True, window=None,
+                    rope_theta=10000.0, positions=None, cache: KVCache | None = None,
+                    context=None, use_pallas=False, chunk=1024):
+    """Full attention block: projections (+bias), RoPE, flash, output proj.
+
+    ``context`` switches to cross-attention (K/V from context, no RoPE on it,
+    no causal mask).  With ``cache`` set, x is the new-token slice and K/V are
+    appended to the cache (self-attention serving path).
+    """
+    B, S, E = x.shape
+    q = jnp.einsum("bse,ehd->bshd", x, params["wq"].reshape(E, n_heads, head_dim))
+    if "bq" in params:
+        q = q + params["bq"].reshape(n_heads, head_dim)
+    kv_src = context if context is not None else x
+    k = jnp.einsum("bse,ehd->bshd", kv_src,
+                   params["wk"].reshape(E, n_kv, head_dim))
+    v = jnp.einsum("bse,ehd->bshd", kv_src,
+                   params["wv"].reshape(E, n_kv, head_dim))
+    if "bk" in params:
+        k = k + params["bk"].reshape(n_kv, head_dim)
+        v = v + params["bv"].reshape(n_kv, head_dim)
+
+    if positions is None:
+        positions = jnp.arange(S)[None, :].astype(jnp.int32)
+        positions = jnp.broadcast_to(positions, (B, S))
+
+    if context is None and rope_theta:
+        q = apply_rope(q.transpose(0, 2, 1, 3), positions[:, None, :], rope_theta)
+        k = apply_rope(k.transpose(0, 2, 1, 3), positions[:, None, :], rope_theta)
+    else:
+        q = q.transpose(0, 2, 1, 3)
+        k = k.transpose(0, 2, 1, 3)
+    v = v.transpose(0, 2, 1, 3)
+
+    new_cache = None
+    if cache is not None:
+        new_cache = cache.append(k, v, positions)
+        k, v = new_cache.dequant()
+        # keep the (B, Hkv, C, D) views sharded inside the layer scan: batch
+        # over data; heads over model when divisible, else cache sequence
+        from repro.train.sharding import _ACT, constrain
+
+        tp_size = _ACT.get("tp_size", 1)
+        kv_tags = (
+            ("dp", "tp", None, None)
+            if k.shape[1] % tp_size == 0
+            else ("dp", None, "tp", None)
+        )
+        k = constrain(k, kv_tags)
+        v = constrain(v, kv_tags)
+        kpos = new_cache.positions
+        o = chunked_attention(q, k, v, causal=causal, window=window,
+                              q_positions=positions, k_positions=kpos, chunk=chunk)
+    elif use_pallas and S % 128 == 0 and context is None:
+        from repro.kernels.flash_attention.ops import flash_attention
+
+        o = flash_attention(q, k, v, causal=causal)
+    else:
+        o = chunked_attention(q, k, v, causal=causal and context is None,
+                              window=window, q_positions=positions, chunk=chunk)
+
+    o = o.transpose(0, 2, 1, 3).reshape(B, S, n_heads * head_dim)
+    out = jnp.einsum("bsh,he->bse", o, params["wo"])
+    return (out, new_cache) if cache is not None else (out, None)

@@ -1,0 +1,41 @@
+"""Feed-forward blocks: SwiGLU (LLaMA-style) and GELU (whisper-style)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.train.sharding import gather_weight
+
+
+def swiglu_init(key, d_model: int, d_ff: int, dtype=jnp.bfloat16):
+    k1, k2, k3 = jax.random.split(key, 3)
+    s_in = d_model ** -0.5
+    s_ff = d_ff ** -0.5
+    return {
+        "w_gate": (jax.random.normal(k1, (d_model, d_ff)) * s_in).astype(dtype),
+        "w_up": (jax.random.normal(k2, (d_model, d_ff)) * s_in).astype(dtype),
+        "w_down": (jax.random.normal(k3, (d_ff, d_model)) * s_ff).astype(dtype),
+    }
+
+
+def swiglu(params, x):
+    g = jnp.einsum("...e,ef->...f", x, params["w_gate"])
+    u = jnp.einsum("...e,ef->...f", x, params["w_up"])
+    h = jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype) * u
+    return jnp.einsum("...f,fe->...e", h, params["w_down"])
+
+
+def gelu_mlp_init(key, d_model: int, d_ff: int, dtype=jnp.bfloat16):
+    k1, k2 = jax.random.split(key)
+    return {
+        "w_up": (jax.random.normal(k1, (d_model, d_ff)) * d_model ** -0.5).astype(dtype),
+        "b_up": jnp.zeros((d_ff,), dtype),
+        "w_down": (jax.random.normal(k2, (d_ff, d_model)) * d_ff ** -0.5).astype(dtype),
+        "b_down": jnp.zeros((d_model,), dtype),
+    }
+
+
+def gelu_mlp(params, x):
+    h = jnp.einsum("...e,ef->...f", x, params["w_up"]) + params["b_up"]
+    h = jax.nn.gelu(h.astype(jnp.float32)).astype(x.dtype)
+    return jnp.einsum("...f,fe->...e", h, params["w_down"]) + params["b_down"]

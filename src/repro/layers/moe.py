@@ -1,0 +1,97 @@
+"""Top-k MoE with *grouped* gather-based capacity dispatch (GShard-style).
+
+Tokens are processed in G groups aligned with the data shards: router,
+cumsum-slotting, and the dispatch/combine gathers all stay group-local, so
+under SPMD the only cross-shard traffic is the expert-boundary exchange
+(all-to-all-like) instead of whole-batch all-gathers — the fix measured in
+EXPERIMENTS §Perf (mixtral train collective term).
+
+Dispatch is expressed with gathers/scatters rather than one-hot einsums so
+compiled HLO FLOPs stay close to the useful expert FLOPs.  Expert weights
+shard over 'model' when n_experts divides it (expert parallelism); otherwise
+the expert FFN dims shard over 'model' (tensor parallelism inside experts).
+
+Arctic's dense residual MLP (config.dense_residual) runs in parallel with the
+routed experts and is summed by the caller.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.train.sharding import _ACT, constrain
+
+
+def moe_init(key, d_model: int, d_ff: int, n_experts: int, dtype=jnp.bfloat16):
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    s_in, s_ff = d_model ** -0.5, d_ff ** -0.5
+    return {
+        "router": (jax.random.normal(k1, (d_model, n_experts)) * s_in).astype(jnp.float32),
+        "w_gate": (jax.random.normal(k2, (n_experts, d_model, d_ff)) * s_in).astype(dtype),
+        "w_up": (jax.random.normal(k3, (n_experts, d_model, d_ff)) * s_in).astype(dtype),
+        "w_down": (jax.random.normal(k4, (n_experts, d_ff, d_model)) * s_ff).astype(dtype),
+    }
+
+
+def _pick_groups(n_tokens: int, groups: int | None) -> int:
+    g = groups if groups is not None else max(1, _ACT.get("dp_size", 1))
+    while g > 1 and n_tokens % g:
+        g //= 2
+    return g
+
+
+def moe_apply(params, x, *, top_k: int = 2, capacity_factor: float = 1.25,
+              groups: int | None = None):
+    """x: (B, S, E) -> (B, S, E); deterministic capacity-dropping dispatch.
+
+    ``groups`` defaults to the data-parallel shard count so every gather is
+    shard-local.
+    """
+    B, S, E = x.shape
+    n_exp = params["router"].shape[1]
+    n = B * S
+    G = _pick_groups(n, groups)
+    ng = n // G
+    xt = x.reshape(G, ng, E)
+    xt = constrain(xt, ("dp", None, None))
+
+    logits = jnp.einsum("gne,ex->gnx", xt.astype(jnp.float32), params["router"])
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, exp_idx = jax.lax.top_k(probs, top_k)            # (G, ng, k)
+    gate_vals = gate_vals / gate_vals.sum(axis=-1, keepdims=True)
+
+    capacity = max(1, int(ng * top_k * capacity_factor / n_exp))
+    # slot of each (token, k) in its expert's queue — group-local cumsum over
+    # the k-major flat order (deterministic priority)
+    flat_exp = exp_idx.transpose(0, 2, 1).reshape(G, top_k * ng)  # (G, k*ng)
+    onehot = jax.nn.one_hot(flat_exp, n_exp, dtype=jnp.int32)     # (G, k*ng, X)
+    pos_in_exp = jnp.cumsum(onehot, axis=1) - 1
+    slot = jnp.take_along_axis(pos_in_exp, flat_exp[..., None], axis=2)[..., 0]
+    keep = slot < capacity
+
+    token_id = jnp.tile(jnp.arange(ng, dtype=jnp.int32), top_k)[None].repeat(G, 0)
+
+    def scatter_disp(fe, sl, tid, kp):
+        d = jnp.full((n_exp, capacity), ng, dtype=jnp.int32)
+        return d.at[jnp.where(kp, fe, n_exp), sl].set(tid, mode="drop")
+
+    disp = jax.vmap(scatter_disp)(flat_exp, slot, token_id, keep)  # (G, X, C)
+
+    xt_pad = jnp.concatenate([xt, jnp.zeros((G, 1, E), xt.dtype)], axis=1)
+    exp_in = jax.vmap(lambda xp, d: xp[d])(xt_pad, disp)            # (G, X, C, E)
+    exp_in = constrain(exp_in, ("dp", "tp", None, None))
+    g = jnp.einsum("gxce,xef->gxcf", exp_in, params["w_gate"])
+    u = jnp.einsum("gxce,xef->gxcf", exp_in, params["w_up"])
+    h = jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype) * u
+    exp_out = jnp.einsum("gxcf,xfe->gxce", h, params["w_down"])
+    exp_out = constrain(exp_out, ("dp", "tp", None, None))
+
+    # combine: each (token, k) reads back its slot if kept (group-local)
+    flat_out = exp_out.reshape(G, n_exp * capacity, E)
+    flat_out_pad = jnp.concatenate([flat_out, jnp.zeros((G, 1, E), flat_out.dtype)], 1)
+    gather_idx = jnp.where(keep, flat_exp * capacity + slot, n_exp * capacity)
+    per_k = jax.vmap(lambda fo, gi: fo[gi])(flat_out_pad, gather_idx)
+    per_k = per_k.reshape(G, top_k, ng, E)
+    # combine in bf16: halves the wire bytes of the cross-shard reduction
+    out = jnp.einsum("gkne,gnk->gne", per_k, gate_vals.astype(per_k.dtype))
+    return out.reshape(B, S, E).astype(x.dtype)

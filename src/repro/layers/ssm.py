@@ -1,0 +1,274 @@
+"""SSM / linear-attention blocks: Mamba2 (SSD, chunked) and RWKV6 (Finch).
+
+Both are implemented in their chunked parallel forms (quadratic within a
+chunk, linear across chunks via a lax.scan-carried state) — the TPU-friendly
+formulation; single-token decode uses the exact recurrence on the carried
+state.  These are the sub-quadratic paths that make the ``long_500k`` shape
+lowerable for rwkv6/zamba2.
+
+Numerical note (DESIGN §7): RWKV6's per-channel data-dependent decay is
+factorized as r̃=r*exp(lc), k̃=k*exp(-lc) inside a chunk; log-decay per step is
+clamped to >= LOG_DECAY_FLOOR so exp(-lc) stays bounded in f32 (chunk 32 ->
+exp(11.2) max).  Mamba2's per-head scalar decay uses the exact segment-sum
+mask (bounded <= 1), no clamp needed.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+LOG_DECAY_FLOOR = -0.35
+RWKV_CHUNK = 32
+MAMBA_CHUNK = 64
+
+# calibration hooks (see layers/attention.py)
+CHUNK_OVERRIDE = [None]
+SCAN_UNROLL = [False]
+
+
+# ===========================================================================
+# Mamba2 (SSD)
+# ===========================================================================
+def mamba2_init(key, d_model: int, d_state: int = 64, head_dim: int = 64,
+                expand: int = 2, dtype=jnp.bfloat16):
+    d_inner = expand * d_model
+    n_heads = d_inner // head_dim
+    ks = jax.random.split(key, 6)
+    s = d_model ** -0.5
+    return {
+        "w_in": (jax.random.normal(ks[0], (d_model, 2 * d_inner + 2 * d_state + n_heads))
+                 * s).astype(dtype),
+        "w_out": (jax.random.normal(ks[1], (d_inner, d_model)) * d_inner ** -0.5).astype(dtype),
+        "A_log": jnp.zeros((n_heads,), jnp.float32),      # A = -exp(A_log)
+        "dt_bias": jnp.full((n_heads,), -2.0, jnp.float32),
+        "conv_w": (jax.random.normal(ks[2], (4, d_inner)) * 0.5).astype(dtype),
+        "norm_scale": jnp.ones((d_inner,), dtype),
+    }
+
+
+class Mamba2State(NamedTuple):
+    ssm: jax.Array       # (B, H, P, N)
+    conv: jax.Array      # (B, 3, d_inner) last 3 pre-conv inputs
+
+
+def _causal_conv(x, conv_w, conv_state=None):
+    """Depthwise causal conv, k=4.  x: (B,S,D); returns (y, new_state)."""
+    B, S, D = x.shape
+    if conv_state is None:
+        xp = jnp.pad(x, ((0, 0), (3, 0), (0, 0)))
+    else:
+        xp = jnp.concatenate([conv_state.astype(x.dtype), x], axis=1)
+    y = sum(xp[:, i : i + S] * conv_w[i] for i in range(4))
+    return jax.nn.silu(y.astype(jnp.float32)).astype(x.dtype), xp[:, -3:]
+
+
+def _segsum_exp(log_a):
+    """exp(segment sums): L[t,s] = exp(sum_{i=s+1..t} log_a_i), s<=t else 0.
+    log_a: (..., L)."""
+    L = log_a.shape[-1]
+    cs = jnp.cumsum(log_a, axis=-1)
+    diff = cs[..., :, None] - cs[..., None, :]   # (t, s): sum_{s+1..t}
+    mask = jnp.tril(jnp.ones((L, L), bool))
+    return jnp.where(mask, jnp.exp(diff), 0.0)
+
+
+def mamba2_apply(params, x, state: Mamba2State | None = None,
+                 d_state: int = 64, head_dim: int = 64, chunk: int = MAMBA_CHUNK):
+    """x: (B,S,E) -> (y, new_state)."""
+    chunk = CHUNK_OVERRIDE[0] or chunk
+    B, S, E = x.shape
+    d_inner = params["w_out"].shape[0]
+    H = d_inner // head_dim
+    N = d_state
+
+    proj = jnp.einsum("bse,ef->bsf", x, params["w_in"])
+    xin, z, Bc, Cc, dt_raw = jnp.split(
+        proj, [d_inner, 2 * d_inner, 2 * d_inner + N, 2 * d_inner + 2 * N], axis=-1
+    )
+    conv_state = state.conv if state is not None else None
+    xc, new_conv = _causal_conv(xin, params["conv_w"], conv_state)
+    xh = xc.reshape(B, S, H, head_dim)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + params["dt_bias"])   # (B,S,H)
+    A = -jnp.exp(params["A_log"])                                          # (H,)
+    log_a = jnp.maximum(dt * A, -20.0)                                     # (B,S,H)
+    Bc = Bc.astype(jnp.float32)
+    Cc = Cc.astype(jnp.float32)
+    xdt = xh.astype(jnp.float32) * dt[..., None]                           # (B,S,H,P)
+
+    if S == 1 and state is not None:
+        # exact single-step recurrence
+        a = jnp.exp(log_a)[:, 0]                                           # (B,H)
+        s_new = state.ssm * a[..., None, None] + jnp.einsum(
+            "bhp,bn->bhpn", xdt[:, 0], Bc[:, 0]
+        )
+        y = jnp.einsum("bhpn,bn->bhp", s_new, Cc[:, 0]).reshape(B, 1, d_inner)
+        new_state = Mamba2State(s_new, new_conv)
+    else:
+        pad = (-S) % chunk
+        if pad:
+            xdt = jnp.pad(xdt, ((0, 0), (0, pad), (0, 0), (0, 0)))
+            Bc = jnp.pad(Bc, ((0, 0), (0, pad), (0, 0)))
+            Cc = jnp.pad(Cc, ((0, 0), (0, pad), (0, 0)))
+            log_a = jnp.pad(log_a, ((0, 0), (0, pad), (0, 0)))
+        nch = (S + pad) // chunk
+        xdt_c = xdt.reshape(B, nch, chunk, H, head_dim).transpose(1, 0, 3, 2, 4)
+        B_c = Bc.reshape(B, nch, chunk, N).transpose(1, 0, 2, 3)
+        C_c = Cc.reshape(B, nch, chunk, N).transpose(1, 0, 2, 3)
+        la_c = log_a.reshape(B, nch, chunk, H).transpose(1, 0, 3, 2)       # (n,B,H,L)
+
+        s0 = state.ssm if state is not None else jnp.zeros((B, H, head_dim, N), jnp.float32)
+
+        def step(s_prev, xs):
+            xdt_b, Bb, Cb, lab = xs      # (B,H,L,P),(B,L,N),(B,L,N),(B,H,L)
+            Lmat = _segsum_exp(lab)      # (B,H,L,L)
+            att = jnp.einsum("bln,bmn->blm", Cb, Bb)[:, None] * Lmat
+            y_intra = jnp.einsum("bhlm,bhmp->bhlp", att, xdt_b)
+            cum = jnp.cumsum(lab, axis=-1)                                # (B,H,L)
+            y_inter = jnp.einsum("bln,bhl,bhpn->bhlp", Cb, jnp.exp(cum), s_prev)
+            decay_out = jnp.exp(cum[..., -1:] - cum)                      # (B,H,L)
+            s_new = s_prev * jnp.exp(cum[..., -1])[..., None, None] + jnp.einsum(
+                "bhl,bhlp,bln->bhpn", decay_out, xdt_b, Bb
+            )
+            return s_new, y_intra + y_inter
+
+        s_fin, ys = jax.lax.scan(step, s0, (xdt_c, B_c, C_c, la_c),
+                                 unroll=bool(SCAN_UNROLL[0]))
+        y = ys.transpose(1, 0, 3, 2, 4).reshape(B, nch * chunk, H * head_dim)[:, :S]
+        new_state = Mamba2State(s_fin, new_conv)
+
+    # gated RMSNorm output (Mamba2 style)
+    yz = y.astype(jnp.float32) * jax.nn.silu(z.astype(jnp.float32))
+    var = jnp.mean(jnp.square(yz), axis=-1, keepdims=True)
+    yn = yz * (var + 1e-6) ** -0.5 * params["norm_scale"].astype(jnp.float32)
+    out = jnp.einsum("bsf,fe->bse", yn.astype(x.dtype), params["w_out"])
+    return out, new_state
+
+
+# ===========================================================================
+# RWKV6 (Finch) — data-dependent decay linear attention
+# ===========================================================================
+def rwkv6_init(key, d_model: int, head_dim: int = 64, lora_rank: int = 64,
+               dtype=jnp.bfloat16):
+    H = d_model // head_dim
+    ks = jax.random.split(key, 9)
+    s = d_model ** -0.5
+    return {
+        "w_r": (jax.random.normal(ks[0], (d_model, d_model)) * s).astype(dtype),
+        "w_k": (jax.random.normal(ks[1], (d_model, d_model)) * s).astype(dtype),
+        "w_v": (jax.random.normal(ks[2], (d_model, d_model)) * s).astype(dtype),
+        "w_g": (jax.random.normal(ks[3], (d_model, d_model)) * s).astype(dtype),
+        "w_o": (jax.random.normal(ks[4], (d_model, d_model)) * s).astype(dtype),
+        # data-dependent decay lora (the Finch feature)
+        "w_decay_a": (jax.random.normal(ks[5], (d_model, lora_rank)) * s).astype(dtype),
+        "w_decay_b": (jax.random.normal(ks[6], (lora_rank, d_model))
+                      * lora_rank ** -0.5).astype(dtype),
+        "decay_base": jnp.full((d_model,), -1.5, jnp.float32),
+        "bonus_u": (jax.random.normal(ks[7], (H, head_dim)) * 0.1).astype(jnp.float32),
+        "mu": (jax.random.uniform(ks[8], (5, d_model))).astype(dtype),  # r,k,v,g,w shift mix
+    }
+
+
+class RWKV6State(NamedTuple):
+    wkv: jax.Array        # (B, H, K, V)
+    prev: jax.Array       # (B, E) last token's hidden (token shift)
+
+
+def rwkv6_apply(params, x, state: RWKV6State | None = None, head_dim: int = 64,
+                chunk: int = RWKV_CHUNK):
+    """Time-mix block. x: (B,S,E) -> (y, new_state)."""
+    chunk = CHUNK_OVERRIDE[0] or chunk
+    B, S, E = x.shape
+    H = E // head_dim
+    K = V = head_dim
+
+    prev = state.prev[:, None] if state is not None else jnp.zeros((B, 1, E), x.dtype)
+    x_shift = jnp.concatenate([prev.astype(x.dtype), x[:, :-1]], axis=1)
+    mu = params["mu"]
+    xr, xk, xv, xg, xw = (x + mu[i] * (x_shift - x) for i in range(5))
+
+    r = jnp.einsum("bse,ef->bsf", xr, params["w_r"]).reshape(B, S, H, K)
+    k = jnp.einsum("bse,ef->bsf", xk, params["w_k"]).reshape(B, S, H, K)
+    v = jnp.einsum("bse,ef->bsf", xv, params["w_v"]).reshape(B, S, H, V)
+    g = jax.nn.silu(jnp.einsum("bse,ef->bsf", xg, params["w_g"]).astype(jnp.float32))
+    dd = jnp.einsum("bsr,re->bse", jnp.tanh(
+        jnp.einsum("bse,er->bsr", xw, params["w_decay_a"]).astype(jnp.float32)
+    ).astype(x.dtype), params["w_decay_b"])
+    log_w = jnp.maximum(
+        -jnp.exp(params["decay_base"] + dd.astype(jnp.float32)), LOG_DECAY_FLOOR
+    ).reshape(B, S, H, K)                                   # per-channel log decay
+    u = params["bonus_u"]                                   # (H, K)
+
+    rf, kf, vf = (t.astype(jnp.float32) for t in (r, k, v))
+    s0 = state.wkv if state is not None else jnp.zeros((B, H, K, V), jnp.float32)
+
+    if S == 1 and state is not None:
+        # exact recurrence: out = r . (S_prev + u*k (x) v);  S = w*S_prev + k (x) v
+        wkv = s0 + jnp.einsum("bhk,bhv->bhkv", u[None] * kf[:, 0], vf[:, 0])
+        out_t = jnp.einsum("bhk,bhkv->bhv", rf[:, 0], wkv)
+        new_s = s0 * jnp.exp(log_w[:, 0])[..., None] + jnp.einsum(
+            "bhk,bhv->bhkv", kf[:, 0], vf[:, 0]
+        )
+        y = out_t.reshape(B, 1, E)
+    else:
+        pad = (-S) % chunk
+        if pad:
+            rf = jnp.pad(rf, ((0, 0), (0, pad), (0, 0), (0, 0)))
+            kf = jnp.pad(kf, ((0, 0), (0, pad), (0, 0), (0, 0)))
+            vf = jnp.pad(vf, ((0, 0), (0, pad), (0, 0), (0, 0)))
+            log_w = jnp.pad(log_w, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        nch = (S + pad) // chunk
+        shp = lambda t: t.reshape(B, nch, chunk, H, K).transpose(1, 0, 3, 2, 4)
+        r_c, k_c, v_c, lw_c = shp(rf), shp(kf), shp(vf), shp(log_w)  # (n,B,H,L,K)
+
+        def step(s_prev, xs):
+            rb, kb, vb, lwb = xs                       # (B,H,L,K)
+            lc = jnp.cumsum(lwb, axis=2)               # inclusive cumsum
+            lc_prev = lc - lwb                         # cumsum up to t-1
+            r_t = rb * jnp.exp(lc_prev)
+            k_t = kb * jnp.exp(-lc)
+            scores = jnp.einsum("bhtk,bhsk->bhts", r_t, k_t)
+            Lm = lwb.shape[2]
+            mask = jnp.tril(jnp.ones((Lm, Lm), bool), k=-1)
+            y_intra = jnp.einsum("bhts,bhsv->bhtv", jnp.where(mask, scores, 0.0), vb)
+            y_diag = jnp.einsum("bhtk,bhtv->bhtv",
+                                rb * u[None, :, None, :] * kb, vb)
+            y_inter = jnp.einsum("bhtk,bhkv->bhtv", r_t, s_prev)
+            a_end = jnp.exp(lc[:, :, -1])               # (B,H,K)
+            k_end = kb * jnp.exp(lc[:, :, -1:] - lc)    # decay from s to L
+            s_new = s_prev * a_end[..., None] + jnp.einsum("bhsk,bhsv->bhkv", k_end, vb)
+            return s_new, y_intra + y_diag + y_inter
+
+        new_s, ys = jax.lax.scan(step, s0, (r_c, k_c, v_c, lw_c),
+                                 unroll=bool(SCAN_UNROLL[0]))
+        y = ys.transpose(1, 0, 3, 2, 4).reshape(B, nch * chunk, E)[:, :S]
+
+    y = (y.reshape(B, -1, E) * g).astype(x.dtype)
+    out = jnp.einsum("bse,ef->bsf", y, params["w_o"])
+    return out, RWKV6State(new_s, x[:, -1])
+
+
+def rwkv6_channel_mix_init(key, d_model: int, d_ff: int, dtype=jnp.bfloat16):
+    k1, k2, k3 = jax.random.split(key, 3)
+    s = d_model ** -0.5
+    return {
+        "w_k": (jax.random.normal(k1, (d_model, d_ff)) * s).astype(dtype),
+        "w_v": (jax.random.normal(k2, (d_ff, d_model)) * d_ff ** -0.5).astype(dtype),
+        "w_r": (jax.random.normal(k3, (d_model, d_model)) * s).astype(dtype),
+        "mu": jax.random.uniform(jax.random.fold_in(key, 7), (2, d_model)).astype(dtype),
+    }
+
+
+def rwkv6_channel_mix(params, x, prev=None):
+    """RWKV FFN (squared-relu). Returns (y, last_token)."""
+    B, S, E = x.shape
+    pv = prev[:, None] if prev is not None else jnp.zeros((B, 1, E), x.dtype)
+    x_shift = jnp.concatenate([pv.astype(x.dtype), x[:, :-1]], axis=1)
+    xk = x + params["mu"][0] * (x_shift - x)
+    xr = x + params["mu"][1] * (x_shift - x)
+    kh = jnp.einsum("bse,ef->bsf", xk, params["w_k"])
+    kh = jnp.square(jax.nn.relu(kh.astype(jnp.float32))).astype(x.dtype)
+    val = jnp.einsum("bsf,fe->bse", kh, params["w_v"])
+    rg = jax.nn.sigmoid(jnp.einsum("bse,ef->bsf", xr, params["w_r"]).astype(jnp.float32))
+    return (rg * val.astype(jnp.float32)).astype(x.dtype), x[:, -1]

@@ -1,0 +1,405 @@
+"""Unified LM implementation covering all ten assigned architectures.
+
+One parameterized decoder (plus optional encoder) built from the layer
+library; blocks are stacked with lax.scan (keeps HLO size O(1) in depth,
+essential for the 80-layer dry-runs) and optionally rematerialized.
+
+Block patterns:
+  * ``attn``         — [dense|moe] transformer blocks (qwen/phi3/granite/
+                       internvl2/mixtral/arctic/whisper-decoder)
+  * ``rwkv``         — RWKV6 time-mix + channel-mix (attention-free)
+  * ``mamba_hybrid`` — Mamba2 blocks with a weight-shared attention+MLP block
+                       every k layers (zamba2)
+
+Serving carries per-layer caches (KVCache / Mamba2State / RWKV6State) as
+scan-stacked pytrees.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.train.sharding import constrain
+from repro.layers.attention import KVCache, attention_apply, attention_init
+from repro.layers.mlp import gelu_mlp, gelu_mlp_init, swiglu, swiglu_init
+from repro.layers.moe import moe_apply, moe_init
+from repro.layers.norms import layernorm, layernorm_init, rmsnorm, rmsnorm_init
+from repro.layers.ssm import (
+    Mamba2State,
+    RWKV6State,
+    mamba2_apply,
+    mamba2_init,
+    rwkv6_apply,
+    rwkv6_channel_mix,
+    rwkv6_channel_mix_init,
+    rwkv6_init,
+)
+
+DTYPES = {"bfloat16": jnp.bfloat16, "float32": jnp.float32}
+
+
+def _norm_init(cfg, dim=None):
+    dim = dim or cfg.d_model
+    return rmsnorm_init(dim) if cfg.norm == "rmsnorm" else layernorm_init(dim)
+
+
+def _norm(cfg, p, x):
+    return rmsnorm(p, x) if cfg.norm == "rmsnorm" else layernorm(p, x)
+
+
+# ===========================================================================
+# Parameter init
+# ===========================================================================
+def _attn_block_init(key, cfg: ArchConfig, dtype):
+    k1, k2 = jax.random.split(key)
+    p = {
+        "ln1": _norm_init(cfg),
+        "attn": attention_init(
+            k1, cfg.d_model, cfg.n_heads, cfg.n_kv, cfg.resolved_head_dim,
+            cfg.qkv_bias, dtype
+        ),
+        "ln2": _norm_init(cfg),
+    }
+    if cfg.n_experts:
+        p["moe"] = moe_init(k2, cfg.d_model, cfg.d_ff, cfg.n_experts, dtype)
+        if cfg.dense_residual:
+            p["mlp"] = swiglu_init(jax.random.fold_in(k2, 1), cfg.d_model, cfg.d_ff, dtype)
+    elif cfg.mlp == "swiglu":
+        p["mlp"] = swiglu_init(k2, cfg.d_model, cfg.d_ff, dtype)
+    else:
+        p["mlp"] = gelu_mlp_init(k2, cfg.d_model, cfg.d_ff, dtype)
+    return p
+
+
+def _rwkv_block_init(key, cfg: ArchConfig, dtype):
+    k1, k2 = jax.random.split(key)
+    return {
+        "ln1": _norm_init(cfg),
+        "time": rwkv6_init(k1, cfg.d_model, cfg.ssm_head_dim, dtype=dtype),
+        "ln2": _norm_init(cfg),
+        "chan": rwkv6_channel_mix_init(k2, cfg.d_model, cfg.d_ff, dtype),
+    }
+
+
+def _mamba_block_init(key, cfg: ArchConfig, dtype):
+    return {
+        "ln": _norm_init(cfg),
+        "mamba": mamba2_init(key, cfg.d_model, cfg.ssm_state, cfg.ssm_head_dim, dtype=dtype),
+    }
+
+
+def init_params(cfg: ArchConfig, key) -> dict:
+    dtype = DTYPES[cfg.param_dtype]
+    keys = jax.random.split(key, 8)
+    p: dict = {
+        "embed": (jax.random.normal(keys[0], (cfg.padded_vocab, cfg.d_model)) * 0.02).astype(dtype),
+        "final_norm": _norm_init(cfg),
+        "lm_head": (jax.random.normal(keys[1], (cfg.d_model, cfg.padded_vocab))
+                    * cfg.d_model ** -0.5).astype(dtype),
+    }
+    if cfg.block_pattern == "attn":
+        layer_keys = jax.random.split(keys[2], cfg.n_layers)
+        p["layers"] = jax.vmap(lambda k: _attn_block_init(k, cfg, dtype))(layer_keys)
+    elif cfg.block_pattern == "rwkv":
+        layer_keys = jax.random.split(keys[2], cfg.n_layers)
+        p["layers"] = jax.vmap(lambda k: _rwkv_block_init(k, cfg, dtype))(layer_keys)
+    elif cfg.block_pattern == "mamba_hybrid":
+        layer_keys = jax.random.split(keys[2], cfg.n_layers)
+        p["layers"] = jax.vmap(lambda k: _mamba_block_init(k, cfg, dtype))(layer_keys)
+        p["shared_attn"] = _attn_block_init(keys[3], cfg, dtype)
+    if cfg.enc_layers:
+        enc_keys = jax.random.split(keys[4], cfg.enc_layers)
+        enc_cfg = cfg
+        p["enc_layers"] = jax.vmap(lambda k: _attn_block_init(k, enc_cfg, dtype))(enc_keys)
+        p["enc_norm"] = _norm_init(cfg)
+        dec_keys = jax.random.split(keys[5], cfg.n_layers)
+        p["cross_layers"] = jax.vmap(
+            lambda k: {
+                "ln": _norm_init(cfg),
+                "attn": attention_init(
+                    k, cfg.d_model, cfg.n_heads, cfg.n_kv, cfg.resolved_head_dim,
+                    False, dtype
+                ),
+            }
+        )(dec_keys)
+    if cfg.frontend:
+        p["frontend_proj"] = (
+            jax.random.normal(keys[6], (cfg.frontend_dim, cfg.d_model))
+            * cfg.frontend_dim ** -0.5
+        ).astype(dtype)
+    return p
+
+
+# ===========================================================================
+# Blocks (apply)
+# ===========================================================================
+def _attn_block(cfg: ArchConfig, p, h, positions, cache, context=None):
+    a, new_cache = attention_apply(
+        p["attn"], _norm(cfg, p["ln1"], h),
+        n_heads=cfg.n_heads, n_kv=cfg.n_kv, head_dim=cfg.resolved_head_dim,
+        causal=context is None, window=cfg.swa_window or None,
+        rope_theta=cfg.rope_theta if context is None else 0.0,
+        positions=positions, cache=cache, context=context,
+    )
+    h = h + a
+    hn = _norm(cfg, p["ln2"], h)
+    if cfg.n_experts:
+        f = moe_apply(p["moe"], hn, top_k=cfg.top_k)
+        if cfg.dense_residual:
+            f = f + swiglu(p["mlp"], hn)
+    elif cfg.mlp == "swiglu":
+        f = swiglu(p["mlp"], hn)
+    else:
+        f = gelu_mlp(p["mlp"], hn)
+    return h + f, new_cache
+
+
+def _rwkv_block(cfg: ArchConfig, p, h, state):
+    tstate = state[0] if state is not None else None
+    cprev = state[1] if state is not None else None
+    t_out, new_t = rwkv6_apply(p["time"], _norm(cfg, p["ln1"], h), tstate,
+                               cfg.ssm_head_dim)
+    h = h + t_out
+    c_out, new_prev = rwkv6_channel_mix(p["chan"], _norm(cfg, p["ln2"], h), cprev)
+    return h + c_out, (new_t, new_prev)
+
+
+def _mamba_block(cfg: ArchConfig, p, h, state):
+    out, new_state = mamba2_apply(p["mamba"], _norm(cfg, p["ln"], h), state,
+                                  cfg.ssm_state, cfg.ssm_head_dim)
+    return h + out, new_state
+
+
+# ===========================================================================
+# Cache containers
+# ===========================================================================
+def init_caches(cfg: ArchConfig, batch: int, capacity: int, dtype=jnp.bfloat16):
+    """Stacked per-layer serving caches.  ``capacity`` = max KV length (the
+    sliding window caps it for SWA archs — the long_500k enabler)."""
+    cap = min(capacity, cfg.swa_window) if cfg.swa_window else capacity
+    hd = cfg.resolved_head_dim
+
+    def stack(make, n):
+        return jax.tree.map(lambda *xs: jnp.stack(xs), *[make() for _ in range(n)])
+
+    if cfg.block_pattern == "attn":
+        return {"kv": stack(lambda: KVCache.init(batch, cfg.n_kv, cap, hd, dtype,
+                                                 quantized=cfg.kv_int8),
+                            cfg.n_layers)}
+    if cfg.block_pattern == "rwkv":
+        H = cfg.d_model // cfg.ssm_head_dim
+        K = V = cfg.ssm_head_dim
+        return {
+            "rwkv": stack(
+                lambda: (
+                    RWKV6State(jnp.zeros((batch, H, K, V), jnp.float32),
+                               jnp.zeros((batch, cfg.d_model), dtype)),
+                    jnp.zeros((batch, cfg.d_model), dtype),
+                ),
+                cfg.n_layers,
+            )
+        }
+    if cfg.block_pattern == "mamba_hybrid":
+        d_inner = 2 * cfg.d_model
+        H = d_inner // cfg.ssm_head_dim
+        n_shared = cfg.n_layers // cfg.hybrid_attn_every
+        return {
+            "mamba": stack(
+                lambda: Mamba2State(
+                    jnp.zeros((batch, H, cfg.ssm_head_dim, cfg.ssm_state), jnp.float32),
+                    jnp.zeros((batch, 3, d_inner), dtype),
+                ),
+                cfg.n_layers,
+            ),
+            "shared_kv": stack(lambda: KVCache.init(batch, cfg.n_kv, cap, hd, dtype,
+                                                    quantized=cfg.kv_int8),
+                               n_shared),
+        }
+    raise ValueError(cfg.block_pattern)
+
+
+# ===========================================================================
+# Forward
+# ===========================================================================
+def _scan_blocks(cfg, fn, h, stacked, caches, remat):
+    """Scan ``fn(h, (layer_params, cache)) -> (h, new_cache)`` over layers."""
+    res_tags = ("dp", "tp", None) if cfg.seq_parallel else ("dp", None, None)
+
+    def body(carry, xs):
+        lp, lc = xs
+        # optional Megatron-SP residual stream (per-arch knob: wins memory
+        # for MoE archs, loses wire for big-d_model dense archs — see
+        # EXPERIMENTS §Perf hypothesis log)
+        carry = constrain(carry, res_tags)
+        out, new_c = fn(carry, lp, lc)
+        out = constrain(out, res_tags)
+        return out, new_c
+
+    if remat:
+        body = jax.checkpoint(body)
+    xs = (stacked, caches)
+    h, new_caches = jax.lax.scan(body, h, xs)
+    return h, new_caches
+
+
+def forward(cfg: ArchConfig, params, tokens, *, positions=None, caches=None,
+            frontend_embeds=None, encoder_out=None, last_only: bool = False):
+    """Returns (logits, new_caches, encoder_out).
+
+    Training/prefill: caches=None or empty caches.  Decode: tokens (B,1) with
+    caches + positions.  ``frontend_embeds``: (B, N, frontend_dim) for
+    vlm/audio archs.  ``encoder_out`` short-circuits the encoder for decode.
+    """
+    dtype = DTYPES[cfg.param_dtype]
+    B, S = tokens.shape
+    h = constrain(params["embed"][tokens], ("dp", None, None))
+
+    if cfg.frontend == "vision" and frontend_embeds is not None:
+        patches = jnp.einsum("bnf,fe->bne", frontend_embeds.astype(dtype),
+                             params["frontend_proj"])
+        h = jnp.concatenate([patches, h], axis=1)
+        S = h.shape[1]
+        if positions is None:
+            positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+
+    # --- encoder (whisper) ------------------------------------------------
+    if cfg.enc_layers and encoder_out is None:
+        if frontend_embeds is None:
+            raise ValueError("encoder-decoder arch needs frontend embeddings")
+        e = jnp.einsum("bnf,fe->bne", frontend_embeds.astype(dtype),
+                       params["frontend_proj"])
+        e_pos = jnp.broadcast_to(
+            jnp.arange(e.shape[1], dtype=jnp.int32)[None], (B, e.shape[1])
+        )
+
+        def enc_fn(hh, lp, lc):
+            out, _ = attention_apply(
+                lp["attn"], _norm(cfg, lp["ln1"], hh),
+                n_heads=cfg.n_heads, n_kv=cfg.n_kv, head_dim=cfg.resolved_head_dim,
+                causal=False, rope_theta=cfg.rope_theta, positions=e_pos,
+            )
+            hh = hh + out
+            hn = _norm(cfg, lp["ln2"], hh)
+            f = gelu_mlp(lp["mlp"], hn) if cfg.mlp == "gelu" else swiglu(lp["mlp"], hn)
+            return hh + f, lc
+
+        e, _ = _scan_blocks(cfg, enc_fn, e, params["enc_layers"],
+                            jnp.zeros((cfg.enc_layers,)), cfg.remat)
+        encoder_out = _norm(cfg, params["enc_norm"], e)
+
+    # --- decoder stack ----------------------------------------------------
+    if cfg.block_pattern == "attn":
+        kv = caches["kv"] if caches else None
+        has_cache = kv is not None
+
+        def fn(hh, lp, lc):
+            hh, new_c = _attn_block(cfg, lp, hh, positions, lc if has_cache else None)
+            return hh, (new_c if has_cache else lc)
+
+        if cfg.enc_layers:
+            # interleave cross-attention after each self-attention block
+            def fn(hh, lps, lc):  # noqa: F811
+                lp, cp = lps
+                hh, new_c = _attn_block(cfg, lp, hh, positions,
+                                        lc if has_cache else None)
+                x_out, _ = attention_apply(
+                    cp["attn"], _norm(cfg, cp["ln"], hh),
+                    n_heads=cfg.n_heads, n_kv=cfg.n_kv,
+                    head_dim=cfg.resolved_head_dim, causal=False,
+                    rope_theta=0.0, positions=positions, context=encoder_out,
+                )
+                return hh + x_out, (new_c if has_cache else lc)
+
+            stacked = (params["layers"], params["cross_layers"])
+        else:
+            stacked = params["layers"]
+        if not has_cache:
+            dummy = jnp.zeros((cfg.n_layers,))
+            h, _ = _scan_blocks(cfg, fn, h, stacked, dummy, cfg.remat)
+            new_caches = None
+        else:
+            h, new_kv = _scan_blocks(cfg, fn, h, stacked, kv, cfg.remat)
+            new_caches = {"kv": new_kv}
+
+    elif cfg.block_pattern == "rwkv":
+        st = caches["rwkv"] if caches else None
+
+        def fn(hh, lp, lc):
+            return _rwkv_block(cfg, lp, hh, lc)
+
+        if st is None:
+            dummy = jnp.zeros((cfg.n_layers,))
+            h, _ = _scan_blocks(cfg, lambda hh, lp, lc: (_rwkv_block(cfg, lp, hh, None)[0], lc),
+                                h, params["layers"], dummy, cfg.remat)
+            new_caches = None
+        else:
+            h, new_st = _scan_blocks(cfg, fn, h, params["layers"], st, cfg.remat)
+            new_caches = {"rwkv": new_st}
+
+    elif cfg.block_pattern == "mamba_hybrid":
+        k = cfg.hybrid_attn_every
+        n_groups = cfg.n_layers // k
+        mamba_p = jax.tree.map(
+            lambda x: x.reshape((n_groups, k) + x.shape[1:]), params["layers"]
+        )
+        mst = caches["mamba"] if caches else None
+        skv = caches["shared_kv"] if caches else None
+        if mst is not None:
+            mst = jax.tree.map(lambda x: x.reshape((n_groups, k) + x.shape[1:]), mst)
+
+        def group_fn(hh, gp, gm, gkv):
+            def inner(carry, xs):
+                lp, lc = xs
+                return _mamba_block(cfg, lp, carry, lc)
+
+            if gm is None:
+                dummy = jnp.zeros((k,))
+                hh, new_gm = jax.lax.scan(
+                    lambda c, xs: (inner(c, (xs[0], None))[0], xs[1]),
+                    hh, (gp, dummy))
+                new_gm = None
+            else:
+                hh, new_gm = jax.lax.scan(inner, hh, (gp, gm))
+            hh, new_gkv = _attn_block(cfg, params["shared_attn"], hh, positions, gkv)
+            return hh, new_gm, new_gkv
+
+        def outer(carry, xs):
+            gp, gm, gkv = xs
+            carry = constrain(carry, ("dp", None, None))
+            hh, new_gm, new_gkv = group_fn(carry, gp, gm, gkv)
+            return constrain(hh, ("dp", None, None)), (new_gm, new_gkv)
+
+        if mst is None:
+            dummy_kv = jnp.zeros((n_groups,))
+            def outer_nc(carry, xs):
+                gp, _ = xs
+                hh, _, _ = group_fn(carry, gp, None, None)
+                return hh, 0.0
+            body = jax.checkpoint(outer_nc) if cfg.remat else outer_nc
+            h, _ = jax.lax.scan(body, h, (mamba_p, dummy_kv))
+            new_caches = None
+        else:
+            body = jax.checkpoint(outer) if cfg.remat else outer
+            h, (new_mst, new_skv) = jax.lax.scan(body, h, (mamba_p, mst, skv))
+            new_caches = {
+                "mamba": jax.tree.map(
+                    lambda x: x.reshape((cfg.n_layers,) + x.shape[2:]), new_mst
+                ),
+                "shared_kv": new_skv,
+            }
+    else:
+        raise ValueError(cfg.block_pattern)
+
+    h = _norm(cfg, params["final_norm"], h)
+    if last_only:
+        h = h[:, -1:]  # avoid materializing (B, S, V) logits in prefill
+    logits = jnp.einsum("bse,ev->bsv", h, params["lm_head"]).astype(jnp.float32)
+    logits = constrain(logits, ("dp", None, "tp"))
+    return logits, new_caches, encoder_out

@@ -1,0 +1,96 @@
+"""AdamW + global-norm clipping + schedules + optional int8 gradient
+compression with error feedback (a distributed-optimization option for
+bandwidth-bound meshes)."""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class OptConfig:
+    lr: float = 3e-4
+    warmup_steps: int = 100
+    total_steps: int = 10000
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    compress_grads: bool = False  # int8 + error feedback
+
+
+class OptState(NamedTuple):
+    step: jax.Array
+    m: dict
+    v: dict
+    error: dict | None  # compression error feedback
+
+
+def lr_at(cfg: OptConfig, step):
+    warm = jnp.minimum(step / jnp.maximum(cfg.warmup_steps, 1), 1.0)
+    prog = jnp.clip(
+        (step - cfg.warmup_steps) / jnp.maximum(cfg.total_steps - cfg.warmup_steps, 1),
+        0.0, 1.0,
+    )
+    cos = 0.5 * (1 + jnp.cos(jnp.pi * prog))
+    return cfg.lr * warm * (0.1 + 0.9 * cos)
+
+
+def init_opt_state(cfg: OptConfig, params) -> OptState:
+    zeros = lambda p: jax.tree.map(lambda x: jnp.zeros(x.shape, jnp.float32), p)
+    return OptState(
+        step=jnp.zeros((), jnp.int32),
+        m=zeros(params),
+        v=zeros(params),
+        error=zeros(params) if cfg.compress_grads else None,
+    )
+
+
+def compress_int8(g, error):
+    """Simulated-int8 compression with error feedback: quantize (g + e) to 256
+    levels per tensor, carry the residual."""
+    gc = g + error
+    scale = jnp.maximum(jnp.max(jnp.abs(gc)), 1e-12) / 127.0
+    q = jnp.round(gc / scale).astype(jnp.int8)
+    deq = q.astype(jnp.float32) * scale
+    return deq, gc - deq
+
+
+def apply_updates(cfg: OptConfig, state: OptState, params, grads):
+    grads = jax.tree.map(lambda g: g.astype(jnp.float32), grads)
+    if cfg.compress_grads:
+        pairs = jax.tree.map(compress_int8, grads, state.error)
+        grads = jax.tree.map(lambda p: p[0], pairs, is_leaf=lambda x: isinstance(x, tuple))
+        new_error = jax.tree.map(lambda p: p[1], pairs, is_leaf=lambda x: isinstance(x, tuple))
+    else:
+        new_error = state.error
+
+    gnorm = jnp.sqrt(
+        sum(jnp.sum(jnp.square(g)) for g in jax.tree.leaves(grads))
+    )
+    clip = jnp.minimum(1.0, cfg.clip_norm / jnp.maximum(gnorm, 1e-12))
+    step = state.step + 1
+    lr = lr_at(cfg, step)
+    b1c = 1 - cfg.b1 ** step.astype(jnp.float32)
+    b2c = 1 - cfg.b2 ** step.astype(jnp.float32)
+
+    def upd(p, g, m, v):
+        g = g * clip
+        m = cfg.b1 * m + (1 - cfg.b1) * g
+        v = cfg.b2 * v + (1 - cfg.b2) * jnp.square(g)
+        mh = m / b1c
+        vh = v / b2c
+        delta = mh / (jnp.sqrt(vh) + cfg.eps) + cfg.weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * delta).astype(p.dtype), m, v
+
+    out = jax.tree.map(upd, params, grads, state.m, state.v)
+    new_params = jax.tree.map(lambda t: t[0], out, is_leaf=lambda x: isinstance(x, tuple))
+    new_m = jax.tree.map(lambda t: t[1], out, is_leaf=lambda x: isinstance(x, tuple))
+    new_v = jax.tree.map(lambda t: t[2], out, is_leaf=lambda x: isinstance(x, tuple))
+    return new_params, OptState(step, new_m, new_v, new_error), {
+        "grad_norm": gnorm, "lr": lr,
+    }

@@ -1,0 +1,99 @@
+"""Train/prefill/decode step builders (the jit-compiled units of the launcher
+and the dry-run)."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models.lm import forward, init_caches
+from repro.optim.adamw import OptConfig, OptState, apply_updates
+
+
+def xent(logits, labels):
+    """Sharding-friendly cross entropy: logsumexp minus a one-hot dot —
+    avoids the vocab-axis gather (take_along_axis) that forces SPMD to
+    all-gather the (B, S, V) logits."""
+    from repro.train.sharding import constrain
+
+    lse = jax.scipy.special.logsumexp(logits, axis=-1)
+    oh = jax.nn.one_hot(labels, logits.shape[-1], dtype=logits.dtype)
+    oh = constrain(oh, ("dp", None, "tp"))
+    label_logit = jnp.einsum("bsv,bsv->bs", logits, oh)
+    return jnp.mean(lse - label_logit)
+
+
+def loss_fn(cfg: ArchConfig, params, batch):
+    logits, _, _ = forward(
+        cfg, params, batch["tokens"], frontend_embeds=batch.get("frontend")
+    )
+    S = batch["tokens"].shape[1]
+    logits = logits[:, -S:]  # vlm: score only the text positions
+    return xent(logits, batch["labels"].astype(jnp.int32))
+
+
+def make_train_step(cfg: ArchConfig, opt_cfg: OptConfig, microbatches: int = 1):
+    """Returns train_step(params, opt_state, batch) -> (params, opt_state, metrics).
+
+    ``microbatches > 1`` accumulates gradients with a lax.scan over batch
+    slices — the collective/compute-overlap knob (gradient reduction of
+    microbatch k overlaps the forward of k+1 under XLA latency hiding).
+    """
+
+    def grads_of(params, batch):
+        return jax.value_and_grad(functools.partial(loss_fn, cfg))(params, batch)
+
+    def train_step(params, opt_state: OptState, batch):
+        if microbatches == 1:
+            loss, grads = grads_of(params, batch)
+        else:
+            def slice_mb(x):
+                b = x.shape[0]
+                return x.reshape((microbatches, b // microbatches) + x.shape[1:])
+
+            mb = jax.tree.map(slice_mb, batch)
+
+            def acc_fn(carry, mbatch):
+                loss_acc, g_acc = carry
+                l, g = grads_of(params, mbatch)
+                return (loss_acc + l, jax.tree.map(jnp.add, g_acc, g)), None
+
+            zero_g = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (loss, grads), _ = jax.lax.scan(acc_fn, (0.0, zero_g), mb)
+            loss = loss / microbatches
+            grads = jax.tree.map(lambda g: g / microbatches, grads)
+        new_params, new_opt, info = apply_updates(opt_cfg, opt_state, params, grads)
+        return new_params, new_opt, {"loss": loss, **info}
+
+    return train_step
+
+
+def make_prefill_step(cfg: ArchConfig, capacity: int):
+    """prefill(params, tokens, frontend) -> (last_logits, caches, encoder_out)."""
+
+    def prefill(params, tokens, frontend=None):
+        B, S = tokens.shape
+        caches = init_caches(cfg, B, capacity)
+        logits, new_caches, enc = forward(
+            cfg, params, tokens, caches=caches, frontend_embeds=frontend,
+            last_only=True,
+        )
+        return logits[:, -1], new_caches, enc
+
+    return prefill
+
+
+def make_decode_step(cfg: ArchConfig):
+    """decode(params, token (B,1), caches, positions (B,1), encoder_out) ->
+    (logits (B,V), new_caches)."""
+
+    def decode(params, token, caches, positions, encoder_out=None):
+        logits, new_caches, _ = forward(
+            cfg, params, token, positions=positions, caches=caches,
+            encoder_out=encoder_out,
+        )
+        return logits[:, -1], new_caches
+
+    return decode

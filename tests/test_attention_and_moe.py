@@ -1,0 +1,108 @@
+"""Chunked attention, KV caches (full + sliding ring), MoE dispatch."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.flash_attention.ref import attention_ref
+from repro.layers.attention import KVCache, chunked_attention
+from repro.layers.moe import moe_apply, moe_init
+
+
+@pytest.mark.parametrize("chunk", [32, 64, 1024])
+@pytest.mark.parametrize("gqa", [(4, 4), (8, 2)])
+def test_chunked_attention_matches_ref(chunk, gqa):
+    Hq, Hkv = gqa
+    B, S, D = 2, 96, 32
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = jax.random.normal(ks[0], (B, Hq, S, D))
+    k = jax.random.normal(ks[1], (B, Hkv, S, D))
+    v = jax.random.normal(ks[2], (B, Hkv, S, D))
+    out = chunked_attention(q, k, v, causal=True, chunk=chunk)
+    ref = attention_ref(q, k, v, True)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=2e-3)
+
+
+def test_sliding_window_mask():
+    B, H, S, D = 1, 2, 64, 16
+    ks = jax.random.split(jax.random.PRNGKey(1), 3)
+    q, k, v = (jax.random.normal(kk, (B, H, S, D)) for kk in ks)
+    out = chunked_attention(q, k, v, causal=True, window=8, chunk=16)
+    # brute force windowed softmax
+    s = jnp.einsum("bhqd,bhkd->bhqk", q, k) * D ** -0.5
+    qi = jnp.arange(S)[:, None]
+    ki = jnp.arange(S)[None, :]
+    mask = (ki <= qi) & (qi - ki < 8)
+    s = jnp.where(mask, s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    ref = jnp.einsum("bhqk,bhkd->bhqd", p, v)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=2e-3)
+
+
+def test_kv_cache_decode_equals_full_attention():
+    """Prefill into cache + single-token decode == full causal attention."""
+    B, H, S, D = 1, 2, 17, 16
+    ks = jax.random.split(jax.random.PRNGKey(2), 3)
+    q, k, v = (jax.random.normal(kk, (B, H, S, D), dtype=jnp.float32) for kk in ks)
+    full = attention_ref(q, k, v, True)
+
+    cache = KVCache.init(B, H, 32, D, jnp.float32)
+    pos = jnp.arange(S - 1)[None]
+    cache = cache.append(k[:, :, : S - 1], v[:, :, : S - 1], pos)
+    cache = cache.append(k[:, :, S - 1 :], v[:, :, S - 1 :],
+                         jnp.array([[S - 1]], jnp.int32))
+    out = chunked_attention(
+        q[:, :, -1:], cache.k, cache.v, causal=True,
+        q_positions=jnp.array([[S - 1]]), k_positions=cache.positions, chunk=16,
+    )
+    np.testing.assert_allclose(np.asarray(out[0, :, 0]), np.asarray(full[0, :, -1]),
+                               atol=2e-3)
+
+
+def test_ring_cache_wraparound_matches_window():
+    """A ring cache of size W behaves like exact SWA once it wraps."""
+    B, H, D, W = 1, 1, 8, 8
+    S = 20
+    ks = jax.random.split(jax.random.PRNGKey(3), 3)
+    q, k, v = (jax.random.normal(kk, (B, H, S, D), dtype=jnp.float32) for kk in ks)
+    cache = KVCache.init(B, H, W, D, jnp.float32)
+    outs = []
+    for t in range(S):
+        cache = cache.append(k[:, :, t : t + 1], v[:, :, t : t + 1],
+                             jnp.array([[t]], jnp.int32))
+        o = chunked_attention(
+            q[:, :, t : t + 1], cache.k, cache.v, causal=True, window=W,
+            q_positions=jnp.array([[t]]), k_positions=cache.positions, chunk=8,
+        )
+        outs.append(o)
+    got = jnp.concatenate(outs, axis=2)
+    ref = chunked_attention(q, k, v, causal=True, window=W, chunk=8)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref), atol=2e-3)
+
+
+def test_moe_top1_huge_capacity_equals_dense_oracle():
+    """top-1 with no capacity pressure == picking each token's argmax expert."""
+    B, S, E, F, X = 2, 8, 16, 32, 4
+    p = moe_init(jax.random.PRNGKey(0), E, F, X, dtype=jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(1), (B, S, E), dtype=jnp.float32)
+    out = moe_apply(p, x, top_k=1, capacity_factor=8.0)
+
+    logits = jnp.einsum("bse,ex->bsx", x, p["router"])
+    best = jnp.argmax(logits, -1)
+    ref = jnp.zeros_like(x)
+    for e in range(X):
+        g = jax.nn.silu(jnp.einsum("bse,ef->bsf", x, p["w_gate"][e]))
+        u = jnp.einsum("bse,ef->bsf", x, p["w_up"][e])
+        o = jnp.einsum("bsf,fe->bse", g * u, p["w_down"][e])
+        ref = jnp.where((best == e)[..., None], o, ref)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=2e-4, atol=2e-4)
+
+
+def test_moe_capacity_drops_tokens():
+    """With capacity factor << 1 some tokens must be dropped (output zeros)."""
+    B, S, E, F, X = 1, 32, 8, 16, 2
+    p = moe_init(jax.random.PRNGKey(2), E, F, X, dtype=jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(3), (B, S, E), dtype=jnp.float32)
+    out = moe_apply(p, x, top_k=1, capacity_factor=0.25)
+    zero_rows = np.sum(np.all(np.asarray(out) == 0, axis=-1))
+    assert zero_rows > 0

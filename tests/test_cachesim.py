@@ -1,0 +1,64 @@
+"""Cache-simulator oracle vs analytical estimator (the measurement stand-in)."""
+import pytest
+
+from repro.core.access import LaunchConfig
+from repro.core.cachesim import SectorCache, simulate_l1_block, simulate_l2_waves
+from repro.core.machines import GPUMachine
+from repro.core.perfmodel import estimate_gpu
+from repro.core.specs import star_stencil_3d, streaming_scale
+
+SMALL = GPUMachine(
+    name="A100/8", n_sms=13, clock_hz=1.41e9, l1_bytes=192 * 1024,
+    l2_bytes=20 * 1024 * 1024 // 8, dram_bw=175e9, l2_bw=625e9,
+    peak_flops_dp=1.2e12,
+)
+
+
+def test_sector_cache_basics():
+    c = SectorCache(capacity_bytes=256)  # 2 lines
+    c.measuring = True
+    c.access(0, 1, False, False)
+    assert c.load_bytes == 32
+    c.access(0, 1, False, False)  # hit
+    assert c.load_bytes == 32
+    c.access(1, 1, False, False)
+    c.access(2, 1, False, False)  # evicts line 0 (LRU)
+    c.access(0, 1, False, False)  # miss again
+    assert c.load_bytes == 32 * 4
+
+
+def test_store_writeback_and_completion_read():
+    c = SectorCache(capacity_bytes=128)  # 1 line
+    c.measuring = True
+    c.access(0, 1, False, True)   # partial store, sector never read
+    c.access(1, 1, False, False)  # evicts line 0
+    assert c.store_bytes == 32
+    assert c.completion_read_bytes == 32  # partial sector re-read
+
+
+def test_streaming_simulated_volumes():
+    spec = streaming_scale(1 << 14)
+    m = simulate_l2_waves(spec, LaunchConfig(block=(256, 1, 1)), SMALL)
+    assert m["dram_load_bytes_per_lup"] == pytest.approx(8.0, rel=0.05)
+    assert m["dram_store_bytes_per_lup"] == pytest.approx(8.0, rel=0.05)
+
+
+@pytest.mark.parametrize("blk,fold", [((64, 4, 4), (1, 1, 1)), ((32, 8, 4), (1, 1, 1))])
+def test_estimator_tracks_simulator_dram(blk, fold):
+    spec = star_stencil_3d(r=2, domain=(48, 96, 128))
+    lc = LaunchConfig(block=blk, folding=fold)
+    sim = simulate_l2_waves(spec, lc, SMALL)
+    est = estimate_gpu(spec, lc, SMALL)
+    total_sim = sim["dram_load_bytes_per_lup"] + sim["dram_store_bytes_per_lup"]
+    total_est = est.dram_load_per_lup + est.dram_store_per_lup
+    assert total_est == pytest.approx(total_sim, rel=0.35)
+
+
+def test_estimator_tracks_simulator_l1(capsys):
+    spec = star_stencil_3d(r=2, domain=(48, 96, 128))
+    lc = LaunchConfig(block=(64, 4, 4))
+    sim = simulate_l1_block(spec, lc, SMALL)
+    est = estimate_gpu(spec, lc, SMALL)
+    assert est.l2_l1_load_per_lup == pytest.approx(
+        sim["l2_to_l1_load_bytes_per_lup"], rel=0.25
+    )

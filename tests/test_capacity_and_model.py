@@ -1,0 +1,65 @@
+"""Capacity model + full GPU estimator behaviour (paper §4.5, §5)."""
+import pytest
+
+from repro.core.access import LaunchConfig
+from repro.core.capacity import CapacityModel, HitRateFit, gompertz
+from repro.core.machines import A100, GPUMachine
+from repro.core.perfmodel import estimate_gpu
+from repro.core.selector import (
+    enumerate_gpu_configs,
+    paper_block_sizes,
+    rank_gpu_configs,
+    ranking_quality,
+)
+from repro.core.specs import star_stencil_3d, streaming_scale
+
+
+def test_gompertz_limits():
+    fit = HitRateFit(a=1.0, b=0.005, c=-1.8)
+    assert fit(0.0) > 0.97
+    assert fit(1.0) > 0.9
+    assert fit(6.0) < 0.01
+    # monotone decreasing
+    vals = [fit(o / 4) for o in range(0, 40)]
+    assert all(a >= b for a, b in zip(vals, vals[1:]))
+
+
+def test_capacity_miss_volume():
+    cm = CapacityModel()
+    v = cm.capacity_miss_volume("l1_loads", v_up=100.0, v_comp=60.0,
+                                v_alloc=1e9, v_cache=1e6)
+    assert v == pytest.approx(40.0, rel=0.01)  # everything misses
+    v2 = cm.capacity_miss_volume("l1_loads", 100.0, 60.0, 1.0, 1e6)
+    assert v2 < 2.0  # everything hits
+
+
+def test_paper_block_sizes_eq6():
+    sizes = paper_block_sizes(1024)
+    assert (1024, 1, 1) in sizes and (16, 2, 32) in sizes and (1, 16, 64) in sizes
+    assert all(x * y * z == 1024 for x, y, z in sizes)
+
+
+def test_streaming_kernel_estimate():
+    """SCALE kernel: 8B load + 8B store per LUP, no reuse."""
+    spec = streaming_scale(1 << 22)
+    est = estimate_gpu(spec, LaunchConfig(block=(256, 1, 1)), A100)
+    assert est.dram_load_per_lup == pytest.approx(8.0, rel=0.05)
+    assert est.dram_store_per_lup == pytest.approx(8.0, rel=0.05)
+    assert est.limiter == "DRAM"
+
+
+def test_stencil_estimator_ranks_paper_configs():
+    """The predicted-best configuration class must match the paper (§5.8):
+    blockish shapes with large x and deep z beat tall thin ones."""
+    spec = star_stencil_3d(r=4, domain=(256, 256, 320))
+    good = estimate_gpu(spec, LaunchConfig((64, 4, 4), (1, 1, 2)), A100)
+    bad = estimate_gpu(spec, LaunchConfig((2, 512, 1)), A100)
+    assert good.perf_lups > 2 * bad.perf_lups
+    assert good.dram_load_per_lup < bad.l2_l1_load_per_lup
+
+
+def test_ranking_quality_metric():
+    q = ranking_quality([1.0, 2.0, 3.0], [10.0, 20.0, 30.0])
+    assert q["efficiency"] == 1.0 and q["spearman"] == pytest.approx(1.0)
+    q2 = ranking_quality([3.0, 2.0, 1.0], [10.0, 20.0, 30.0])
+    assert q2["spearman"] == pytest.approx(-1.0)

@@ -1,0 +1,108 @@
+"""Checkpoint roundtrip/prune/auto-resume + fault-tolerance runtime logic."""
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint.ckpt import latest_step, prune, restore, save
+from repro.runtime.fault import (
+    FailureDetector,
+    RecoveryPlan,
+    StragglerTracker,
+    elastic_mesh_shape,
+    plan_recovery,
+)
+
+
+def _state(seed=0):
+    k = jax.random.PRNGKey(seed)
+    return {
+        "params": {"w": jax.random.normal(k, (8, 8)), "b": jnp.zeros((8,))},
+        "step": jnp.asarray(7),
+    }
+
+
+def test_roundtrip(tmp_path):
+    d = str(tmp_path)
+    st = _state()
+    save(d, 7, st)
+    got, step = restore(d, st)
+    assert step == 7
+    np.testing.assert_array_equal(np.asarray(got["params"]["w"]),
+                                  np.asarray(st["params"]["w"]))
+
+
+def test_latest_and_prune(tmp_path):
+    d = str(tmp_path)
+    for s in (1, 3, 5, 9):
+        save(d, s, _state(s))
+    assert latest_step(d) == 9
+    prune(d, keep=2)
+    assert latest_step(d) == 9
+    assert sorted(os.listdir(d)) == ["step_000005", "step_000009"]
+
+
+def test_uncommitted_checkpoint_ignored(tmp_path):
+    d = str(tmp_path)
+    save(d, 2, _state())
+    os.makedirs(os.path.join(d, "step_000008"))  # partial, no COMMIT
+    assert latest_step(d) == 2
+    got, step = restore(d, _state())
+    assert step == 2
+
+
+def test_async_save(tmp_path):
+    d = str(tmp_path)
+    handle = save(d, 4, _state(), blocking=False)
+    handle.join(timeout=30)
+    assert latest_step(d) == 4
+
+
+def test_failure_detector():
+    clock = [0.0]
+    det = FailureDetector(4, timeout_s=10.0, clock=lambda: clock[0])
+    clock[0] = 5.0
+    for h in range(3):
+        det.heartbeat(h)
+    clock[0] = 14.0  # hosts 0-2 heartbeat 9s ago (alive), host 3 14s ago (dead)
+    dead = det.sweep()
+    assert dead == [3]
+    assert det.alive_hosts == [0, 1, 2]
+
+
+def test_elastic_mesh_shapes():
+    assert elastic_mesh_shape(512, 16) == (2, 16, 16)
+    assert elastic_mesh_shape(511, 16) == (16, 16)   # lose a chip -> 1 pod
+    assert elastic_mesh_shape(256, 16) == (16, 16)
+    assert elastic_mesh_shape(130, 16) == (8, 16)
+    assert elastic_mesh_shape(8, 16) is None
+
+
+def test_straggler_tracker():
+    tr = StragglerTracker(4, window=8, z_threshold=1.5)
+    for step in range(8):
+        for h in range(4):
+            tr.record(h, 1.0 + (3.0 if h == 2 else 0.0))
+    assert tr.stragglers() == [2]
+
+
+def test_plan_recovery_flow():
+    clock = [0.0]
+    det = FailureDetector(8, timeout_s=10.0, clock=lambda: clock[0])
+    tr = StragglerTracker(8)
+    plan = plan_recovery(det, tr, chips_per_host=64, model_parallel=16,
+                         latest_ckpt_step=123)
+    assert plan.action == "continue"
+    clock[0] = 20.0
+    det.heartbeat(0)
+    for h in range(1, 7):
+        det.hosts[h].last_heartbeat = 15.0
+    # host 7 times out
+    plan = plan_recovery(det, tr, 64, 16, 123)
+    assert plan.action == "remesh"
+    assert plan.restore_step == 123
+    assert plan.mesh_shape is not None
+    assert 7 in plan.evicted_hosts

@@ -1,0 +1,82 @@
+"""Property tests: implicit integer-set calculus vs brute-force enumeration."""
+import itertools
+
+from hypothesis import given, settings, strategies as st
+
+from repro.core.isets import (
+    AffineExpr1D,
+    APRange,
+    _crt_intersect,
+    box_intersect,
+    box_points,
+    count_intersection_of_unions,
+    count_union,
+)
+
+ap = st.builds(
+    APRange,
+    start=st.integers(-50, 50),
+    step=st.integers(1, 7),
+    n=st.integers(0, 30),
+)
+
+
+@given(ap, ap)
+@settings(max_examples=80, deadline=None)
+def test_ap_intersect_exact(a, b):
+    got = set(_crt_intersect(a, b))
+    want = set(a) & set(b)
+    assert got == want
+
+
+def boxes_strategy(ndim):
+    small_ap = st.builds(
+        APRange, start=st.integers(-10, 10), step=st.integers(1, 3), n=st.integers(1, 8)
+    )
+    box = st.tuples(*([small_ap] * ndim))
+    return st.lists(box, min_size=1, max_size=5)
+
+
+@given(boxes_strategy(2))
+@settings(max_examples=60, deadline=None)
+def test_count_union_2d(boxes):
+    want = set()
+    for b in boxes:
+        want |= set(box_points(b))
+    assert count_union(boxes) == len(want)
+
+
+@given(boxes_strategy(3))
+@settings(max_examples=40, deadline=None)
+def test_count_union_3d(boxes):
+    want = set()
+    for b in boxes:
+        want |= set(box_points(b))
+    assert count_union(boxes) == len(want)
+
+
+@given(boxes_strategy(2), boxes_strategy(2))
+@settings(max_examples=40, deadline=None)
+def test_intersection_of_unions(a, b):
+    sa = set()
+    for bb in a:
+        sa |= set(box_points(bb))
+    sb = set()
+    for bb in b:
+        sb |= set(box_points(bb))
+    assert count_intersection_of_unions(a, b) == len(sa & sb)
+
+
+@given(
+    st.integers(-8, 8), st.integers(-100, 100), st.integers(1, 64),
+    st.builds(APRange, start=st.integers(-30, 30), step=st.integers(1, 5),
+              n=st.integers(1, 40)),
+)
+@settings(max_examples=120, deadline=None)
+def test_affine_image_exact(a, b, q, r):
+    e = AffineExpr1D(a, b, q)
+    got = set()
+    for rr in e.image(r):
+        got |= set(rr)
+    want = {e(x) for x in r}
+    assert got == want

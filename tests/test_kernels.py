@@ -1,0 +1,103 @@
+"""Per-kernel shape/dtype sweeps: Pallas (interpret) vs pure-jnp oracles."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.flash_attention.kernel import make_flash_attention, make_flash_decode
+from repro.kernels.flash_attention.ref import attention_ref
+from repro.kernels.lbm_d3q15.kernel import make_kernel as make_lbm
+from repro.kernels.lbm_d3q15.ref import WEIGHTS, lbm_step_ref, pad_inputs
+from repro.kernels.matmul.kernel import make_matmul
+from repro.kernels.stencil3d25.kernel import make_kernel as make_stencil
+from repro.kernels.stencil3d25.ref import pad_input, star_stencil_ref, star_weights
+
+
+@pytest.mark.parametrize("r", [1, 2, 4])
+@pytest.mark.parametrize("variant,ty", [("replane", None), ("ring", None), ("ytile_ring", 8)])
+@pytest.mark.parametrize("dtype", [jnp.float32])
+def test_stencil_variants(r, variant, ty, dtype):
+    Z, Y, X = 5, 16, 24
+    src = jax.random.normal(jax.random.PRNGKey(r), (Z, Y, X), dtype=dtype)
+    w = star_weights(r, dtype)
+    ref = star_stencil_ref(pad_input(src, r), w, r)
+    padded = pad_input(src, r)
+    if variant == "ytile_ring":
+        if ty < 2 * r:
+            pytest.skip("ty < 2r")
+        ny = Y // ty
+        extra = (ny + 1) * ty - (Y + 2 * r)
+        padded = jnp.pad(padded, ((0, 0), (0, extra), (0, 0)))
+    k = make_stencil(variant, r, (Z, Y, X), tuple(float(x) for x in w), dtype, ty)
+    out = k(padded)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=2e-5)
+
+
+@pytest.mark.parametrize("dom", [(3, 8, 16), (4, 16, 8)])
+@pytest.mark.parametrize("variant,ty", [("replane", None), ("ytile", 4)])
+def test_lbm_variants(dom, variant, ty):
+    Z, Y, X = dom
+    phase = jax.nn.sigmoid(jax.random.normal(jax.random.PRNGKey(0), dom))
+    pdf = jnp.stack([w * phase for w in WEIGHTS])
+    pdf_p, ph_p = pad_inputs(pdf, phase)
+    ref, _ = lbm_step_ref(pdf_p, ph_p)
+    if variant == "ytile":
+        ny = Y // ty
+        extra = (ny + 1) * ty - (Y + 2)
+        pdf_p = jnp.pad(pdf_p, ((0, 0), (0, 0), (0, extra), (0, 0)))
+        ph_p = jnp.pad(ph_p, ((0, 0), (0, extra), (0, 0)))
+    out = make_lbm(variant, dom, ty)(pdf_p, ph_p)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=2e-5)
+
+
+@pytest.mark.parametrize("shape", [(128, 128, 128), (256, 384, 128), (128, 256, 256)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_matmul_sweep(shape, dtype):
+    M, K, N = shape
+    a = jax.random.normal(jax.random.PRNGKey(0), (M, K), dtype=dtype)
+    b = jax.random.normal(jax.random.PRNGKey(1), (K, N), dtype=dtype)
+    out = make_matmul(M, K, N, 128, 128, 128, dtype)(a, b)
+    ref = jnp.dot(a.astype(jnp.float32), b.astype(jnp.float32))
+    tol = 1e-4 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(ref), rtol=tol, atol=tol * 8
+    )
+
+
+@pytest.mark.parametrize("gqa", [(4, 4), (4, 2), (8, 1)])
+@pytest.mark.parametrize("causal", [True, False])
+def test_flash_attention_sweep(gqa, causal):
+    Hq, Hkv = gqa
+    B, S, D = 2, 256, 64
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = jax.random.normal(ks[0], (B, Hq, S, D))
+    k = jax.random.normal(ks[1], (B, Hkv, S, D))
+    v = jax.random.normal(ks[2], (B, Hkv, S, D))
+    out = make_flash_attention(B, Hq, Hkv, S, S, D, 128, 128, causal)(q, k, v)
+    ref = attention_ref(q, k, v, causal)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=2e-3)
+
+
+@pytest.mark.parametrize("bk", [128, 256])
+def test_flash_decode(bk):
+    B, Hq, Hkv, S, D = 2, 8, 2, 512, 64
+    ks = jax.random.split(jax.random.PRNGKey(1), 3)
+    q = jax.random.normal(ks[0], (B, Hq, 1, D))
+    k = jax.random.normal(ks[1], (B, Hkv, S, D))
+    v = jax.random.normal(ks[2], (B, Hkv, S, D))
+    out = make_flash_decode(B, Hq, Hkv, S, D, bk)(q, k, v)
+    ref = attention_ref(q, k, v, True)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=2e-3)
+
+
+def test_flash_bf16():
+    B, Hq, Hkv, S, D = 1, 2, 2, 128, 64
+    ks = jax.random.split(jax.random.PRNGKey(2), 3)
+    q = jax.random.normal(ks[0], (B, Hq, S, D), dtype=jnp.bfloat16)
+    k = jax.random.normal(ks[1], (B, Hkv, S, D), dtype=jnp.bfloat16)
+    v = jax.random.normal(ks[2], (B, Hkv, S, D), dtype=jnp.bfloat16)
+    out = make_flash_attention(B, Hq, Hkv, S, S, D, 128, 128, True, jnp.bfloat16)(q, k, v)
+    ref = attention_ref(q, k, v, True)
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(ref, np.float32), atol=3e-2
+    )

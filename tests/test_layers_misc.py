@@ -1,0 +1,82 @@
+"""Extra unit coverage: RoPE, norms, machine models, HLO parser edge cases."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.hlo import collective_bytes
+from repro.core.machines import TPU_V5E
+from repro.layers.norms import layernorm, layernorm_init, rmsnorm, rmsnorm_init
+from repro.layers.rope import apply_rope
+
+
+def test_rope_preserves_norm_and_relativity():
+    """Rotations preserve per-pair norms; dot products depend only on the
+    position difference (the RoPE property)."""
+    D = 32
+    k = jax.random.PRNGKey(0)
+    q = jax.random.normal(k, (1, 1, 1, D))
+    pos = jnp.array([[5]])
+    out = apply_rope(q, pos)
+    np.testing.assert_allclose(
+        np.linalg.norm(np.asarray(out)), np.linalg.norm(np.asarray(q)), rtol=1e-5
+    )
+    # relativity: <R(p)q, R(p+d)k> == <R(0)q, R(d)k>
+    kk = jax.random.normal(jax.random.PRNGKey(1), (1, 1, 1, D))
+    def dot(a, b):
+        return float(jnp.sum(a * b))
+    for p in (0, 7, 123):
+        d = 11
+        lhs = dot(apply_rope(q, jnp.array([[p]])), apply_rope(kk, jnp.array([[p + d]])))
+        rhs = dot(apply_rope(q, jnp.array([[0]])), apply_rope(kk, jnp.array([[d]])))
+        assert lhs == pytest.approx(rhs, rel=1e-4)
+
+
+def test_norms_match_reference():
+    E = 64
+    x = jax.random.normal(jax.random.PRNGKey(0), (2, 3, E))
+    p = rmsnorm_init(E)
+    got = rmsnorm(p, x)
+    ref = x / np.sqrt(np.mean(np.square(np.asarray(x)), -1, keepdims=True) + 1e-6)
+    np.testing.assert_allclose(np.asarray(got), ref, rtol=1e-5)
+    p2 = layernorm_init(E)
+    got2 = np.asarray(layernorm(p2, x))
+    assert abs(got2.mean()) < 1e-5
+    np.testing.assert_allclose(got2.std(axis=-1), 1.0, atol=1e-2)
+
+
+def test_machine_model_constants():
+    m = TPU_V5E
+    assert m.sublane_elems(4) == 8 and m.sublane_elems(2) == 16 and m.sublane_elems(1) == 32
+    assert m.peak_flops(2) == m.peak_flops_bf16
+    assert m.peak_flops(4) < m.peak_flops_bf16
+
+
+def test_hlo_parser_edge_cases():
+    # async pairs: -start counted, -done skipped; unknown dtypes ignored
+    text = """
+      %ag1 = bf16[32,64]{1,0} all-gather-start(bf16[2,64]{1,0} %x), replica_groups=[4,16]<=[64], dimensions={0}
+      %ag2 = bf16[32,64]{1,0} all-gather-done(bf16[32,64]{1,0} %ag1)
+      %rs = f32[8,8]{1,0} reduce-scatter(f32[64,8]{1,0} %y), replica_groups={{0,1,2,3,4,5,6,7}}, to_apply=%add
+    """
+    cb = collective_bytes(text)
+    assert cb["all-gather"]["count"] == 1
+    assert cb["reduce-scatter"]["count"] == 1
+    assert cb["reduce-scatter"]["payload_bytes"] == 64 * 8 * 4
+    # empty text
+    assert collective_bytes("")["total"]["count"] == 0
+
+
+def test_streaming_kernels_fig2():
+    """Paper fig. 2 kernels: LOAD 8B/LUP read-only; SCALE 8+8."""
+    from repro.core.access import LaunchConfig
+    from repro.core.machines import A100
+    from repro.core.perfmodel import estimate_gpu
+    from repro.core.specs import streaming_load, streaming_scale
+
+    lc = LaunchConfig(block=(256, 1, 1))
+    ld = estimate_gpu(streaming_load(1 << 22), lc, A100)
+    assert ld.dram_load_per_lup == pytest.approx(8.0, rel=0.05)
+    assert ld.dram_store_per_lup == 0.0
+    sc = estimate_gpu(streaming_scale(1 << 22), lc, A100)
+    assert sc.dram_load_per_lup + sc.dram_store_per_lup == pytest.approx(16.0, rel=0.05)

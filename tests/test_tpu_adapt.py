@@ -1,0 +1,90 @@
+"""TPU estimator tests: revisit analysis, feasibility, config selection."""
+import random
+
+from hypothesis import given, settings, strategies as st
+
+from repro.core.machines import TPUMachine, TPU_V5E
+from repro.core.tpu_adapt import (
+    MatmulShape,
+    OperandSpec,
+    PallasKernelSpec,
+    estimate_pallas,
+    fetch_count,
+    fetch_count_oracle,
+    select_pallas_config,
+)
+
+
+@given(
+    st.lists(st.integers(1, 5), min_size=1, max_size=4),
+    st.data(),
+)
+@settings(max_examples=120, deadline=None)
+def test_fetch_count_matches_grid_walk(grid, data):
+    grid = tuple(grid)
+    nd = len(grid)
+    deps = tuple(sorted(data.draw(st.sets(st.integers(0, nd - 1), max_size=nd))))
+    fn = lambda *idx: tuple(idx[d] for d in deps)
+    assert fetch_count(grid, deps) == fetch_count_oracle(grid, fn)
+
+
+def test_vmem_padding_granularity():
+    m = TPU_V5E
+    op32 = OperandSpec("x", (1, 5, 100), elem_bytes=4)
+    # pad 5 -> 8 sublanes, 100 -> 128 lanes
+    assert op32.vmem_block_bytes(m) == 1 * 8 * 128 * 4
+    op16 = OperandSpec("x", (1, 5, 100), elem_bytes=2)
+    assert op16.vmem_block_bytes(m) == 1 * 16 * 128 * 2
+
+
+def test_mxu_padding_penalty():
+    m = TPU_V5E
+    small = MatmulShape(8, 100, 100)
+    assert small.padded_flops(m, elem_bytes=4) == 2 * 8 * 128 * 128
+    assert small.padded_flops(m, elem_bytes=2) == 2 * 16 * 128 * 128
+
+
+def test_layer_condition_feasibility():
+    """Oversized working set -> infeasible (the VMEM layer condition)."""
+    big = PallasKernelSpec(
+        name="big", grid=(4,),
+        operands=(OperandSpec("x", (1, 8192, 8192), 4, grid_deps=(0,)),),
+    )
+    assert not estimate_pallas(big).feasible
+    small = PallasKernelSpec(
+        name="small", grid=(4,),
+        operands=(OperandSpec("x", (1, 128, 128), 4, grid_deps=(0,)),),
+    )
+    assert estimate_pallas(small).feasible
+
+
+def test_stencil_selector_prefers_ring_until_lc_breaks():
+    from repro.kernels.stencil3d25.generator import rank_configs
+
+    small = rank_configs(4, (128, 512, 512), elem_bytes=8)
+    assert small[0].config["variant"] == "ring"
+    big = rank_configs(4, (128, 4096, 4096), elem_bytes=8)
+    assert big[0].config["variant"] == "ytile_ring"
+    # ring must not even appear (infeasible)
+    assert all(rc.config["variant"] != "ring" for rc in big)
+
+
+def test_matmul_selector_prefers_bigger_blocks():
+    from repro.kernels.matmul.generator import rank_configs
+
+    ranked = rank_configs(4096, 4096, 4096, elem_bytes=2)
+    best, worst = ranked[0], ranked[-1]
+    assert best.estimate.total_time < worst.estimate.total_time
+    assert best.config["bm"] * best.config["bn"] > worst.config["bm"] * worst.config["bn"]
+
+
+def test_estimate_hbm_volume_ring_vs_replane():
+    from repro.kernels.stencil3d25.generator import candidate_specs
+
+    specs = dict(
+        (c["variant"], s) for c, s in candidate_specs(4, (64, 256, 256), 8)
+        if c.get("ty") in (None, 16)
+    )
+    ring = estimate_pallas(specs["ring"])
+    replane = estimate_pallas(specs["replane"])
+    assert replane.hbm_bytes > 4 * ring.hbm_bytes

@@ -1,0 +1,49 @@
+"""Wave decomposition + layer-set construction tests."""
+from hypothesis import given, settings, strategies as st
+
+from repro.core.access import LaunchConfig
+from repro.core.isets import box_points, count_union
+from repro.core.specs import star_stencil_3d
+from repro.core.wave import (
+    build_wave_sets,
+    linear_block_range_boxes,
+    occupancy_blocks_per_sm,
+)
+
+
+@given(
+    st.tuples(st.integers(1, 7), st.integers(1, 7), st.integers(1, 7)),
+    st.integers(0, 400),
+    st.integers(0, 120),
+)
+@settings(max_examples=150, deadline=None)
+def test_linear_range_decomposition(grid, start, count):
+    gx, gy, gz = grid
+    boxes = linear_block_range_boxes(grid, start, count)
+    got = set()
+    for b in boxes:
+        for z, y, x in box_points(b):
+            got.add((z * gy + y) * gx + x)
+    total = gx * gy * gz
+    want = set(range(max(0, min(start, total)), min(start + count, total)))
+    assert got == want
+    # boxes must be disjoint
+    assert sum(count_union([b]) for b in boxes) == len(got)
+
+
+def test_occupancy():
+    assert occupancy_blocks_per_sm(LaunchConfig(block=(1024, 1, 1))) == 2
+    assert occupancy_blocks_per_sm(LaunchConfig(block=(256, 1, 1))) == 8
+    assert occupancy_blocks_per_sm(LaunchConfig(block=(32, 1, 1))) == 32
+
+
+def test_wave_sets_structure():
+    spec = star_stencil_3d(r=2, domain=(64, 64, 64))
+    lc = LaunchConfig(block=(32, 4, 4))
+    ws = build_wave_sets(spec, lc, n_sms=13)
+    assert ws.n_blocks == 13 * 4  # 512-thread blocks -> 4 blocks/SM
+    wave_pts = count_union(ws.wave)
+    assert wave_pts == ws.n_blocks * lc.points_per_block()
+    # y layer = one row of blocks, z layer = one plane
+    assert count_union(ws.y_layer) == ws.grid[0] * lc.points_per_block()
+    assert count_union(ws.z_layer) == ws.grid[0] * ws.grid[1] * lc.points_per_block()
