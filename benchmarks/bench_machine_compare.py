@@ -1,7 +1,11 @@
 """Paper §1.1: "performance comparison of different GPU models, including
 hypothetical GPUs for architectural exploration" — the same kernel + config
 space priced on V100, A100, a hypothetical A100 with doubled L2, and the
-TPU-v5e Pallas path, without touching any hardware.
+TPU-v5e Pallas path, all through ONE ``Explorer.explore()`` call.
+
+The engine's invariant cache makes the hypothetical-GPU sweep nearly free:
+the doubled-L2 A100 shares every grid walk, footprint box, and wave count
+with the real A100 — only the capacity hit-rates are re-evaluated.
 
 Reproduces the paper's §5.8 observation that the A100's larger L2 shifts the
 optimal thread-block shape away from the V100's (32,2,16) toward shapes with
@@ -9,8 +13,8 @@ less wave-inherent reuse.
 """
 import dataclasses
 
-from repro.core.machines import A100, V100
-from repro.core.selector import rank_gpu_configs
+from repro.core.engine import Explorer, Workload
+from repro.core.machines import A100, TPU_V5E, V100
 from repro.core.specs import star_stencil_3d
 
 from .common import emit, timed
@@ -20,36 +24,65 @@ A100_BIG_L2 = dataclasses.replace(A100, name="hypothetical-A100-2xL2",
 
 
 def main():
-    spec = star_stencil_3d(r=4, domain=(256, 256, 320))
+    from repro.kernels.stencil3d25.generator import candidate_specs as st_cands
+
+    domain = (256, 256, 320)
+    spec = star_stencil_3d(r=4, domain=domain)
+    workload = Workload(
+        name="stencil3d25",
+        gpu_spec=spec,
+        tpu_candidates=list(st_cands(4, domain, elem_bytes=8)),
+    )
+    explorer = Explorer(parallel=True)
+    report, us = timed(
+        explorer.explore, [workload], [V100, A100, A100_BIG_L2, TPU_V5E]
+    )
+    attribution = report.limiter_attribution()
+    # per-machine rows carry no timing of their own (the whole sweep is one
+    # explore() call, reported on the machine_compare/sweep row)
     for machine in (V100, A100, A100_BIG_L2):
-        ranked, us = timed(rank_gpu_configs, spec, machine, total_threads=1024)
-        best = ranked[0]
+        best = report.best("stencil3d25", machine.name)
+        limiters = attribution[("stencil3d25", machine.name)]
+        lim_str = "|".join(f"{k}:{v}" for k, v in limiters.items())
         emit(
             f"machine_compare/{machine.name}",
-            us,
-            f"best={best.launch.block}x{best.launch.folding};"
-            f"{best.estimate.perf_lups/1e9:.1f}GLups;lim={best.estimate.limiter};"
-            f"dram={best.estimate.dram_load_per_lup:.1f}B",
+            0.0,
+            f"best={best.config.block}x{best.config.folding};"
+            f"{best.estimate.perf_lups/1e9:.1f}GLups;lim={best.limiter};"
+            f"dram={best.estimate.dram_load_per_lup:.1f}B;"
+            f"limiters={lim_str};"
+            f"skipped={len(report.skipped_for('stencil3d25', machine.name))}",
         )
+    # TPU side of the same sweep
+    tpu_best = report.best("stencil3d25", TPU_V5E.name)
+    emit(
+        "machine_compare/TPUv5e", 0.0,
+        f"best={tpu_best.config};B_per_pt={tpu_best.estimate.bytes_per_work:.1f};"
+        f"lim={tpu_best.limiter};"
+        f"skipped={len(report.skipped_for('stencil3d25', TPU_V5E.name))}",
+    )
+    emit("machine_compare/sweep", us, report.summary().replace(",", ";"))
+
     # the paper's §5.8 cross-check: the V100-optimal config class ((32,2,16)
     # family) must still rank within the A100 top decile, and vice versa —
     # the ranking transfers but the optimum shifts
-    from repro.core.access import LaunchConfig
-    from repro.core.perfmodel import estimate_gpu
+    a100_ranking = report.ranking("stencil3d25", A100.name)
+    v100_best_cfg = report.best("stencil3d25", V100.name).config
+    on_a100 = next(
+        (e for e in a100_ranking if e.config == v100_best_cfg), None
+    )
+    if on_a100 is None:  # skipped on A100 (estimation errors are machine-dependent)
+        emit("machine_compare/v100_best_on_a100", 0.0, "relative_perf=n/a")
+    else:
+        frac = on_a100.perf / a100_ranking[0].perf
+        emit("machine_compare/v100_best_on_a100", 0.0,
+             f"relative_perf={frac:.3f}")
 
-    v100_best = LaunchConfig(block=(32, 2, 16), folding=(1, 1, 2))
-    on_a100 = estimate_gpu(spec, v100_best, A100)
-    ranked_a100 = rank_gpu_configs(spec, A100, total_threads=1024)
-    frac = on_a100.perf_lups / ranked_a100[0].estimate.perf_lups
-    emit("machine_compare/v100_best_on_a100", 0.0,
-         f"relative_perf={frac:.3f}")
-    # TPU side for the same stencil
-    from repro.kernels.stencil3d25.generator import rank_configs as tpu_rank
-
-    r = tpu_rank(4, (256, 256, 320), elem_bytes=8)
-    emit("machine_compare/TPUv5e", 0.0,
-         f"best={r[0].config};B_per_pt={r[0].estimate.bytes_per_work:.1f};"
-         f"lim={r[0].estimate.limiter}")
+    # populated-report invariant: every (workload, machine) cell produced
+    # entries and therefore limiter attribution
+    expected = {("stencil3d25", m.name)
+                for m in (V100, A100, A100_BIG_L2, TPU_V5E)}
+    assert set(attribution) == expected, attribution.keys()
 
 
 if __name__ == "__main__":

@@ -1,16 +1,27 @@
-"""Paper figs. 24/25 + §5.8: performance prediction and ranking quality.
+"""Paper figs. 24/25 + §5.8: performance prediction and ranking quality,
+plus the exploration-engine speedup on the paper's configuration grid.
 
 "Measured" performance is the phenomenological model fed with *simulated*
 volumes (the paper's gray markers): this isolates ranking quality of the
 analytical volume estimates exactly as the paper's comparison does.
 Derived: efficiency of the predicted-best config (paper: 96% for the
 stencil) and Spearman rank correlation.
+
+``engine_speedup`` prices the full eq.-6 grid (block shapes x 3 foldings,
+A100) twice: once on the seed serial path (direct ``estimate_gpu`` per
+config) and once through the staged/memoized/parallel engine, asserting an
+identical ranking and >= 3x speedup — the paper's "quick exploration of
+large configuration spaces" made measurable.
 """
+import time
+
 from repro.core.access import LaunchConfig
 from repro.core.cachesim import simulate_l1_block, simulate_l2_waves
+from repro.core.engine import Explorer
 from repro.core.gridwalk import walk_block_l1
+from repro.core.machines import A100
 from repro.core.perfmodel import estimate_gpu
-from repro.core.selector import ranking_quality
+from repro.core.selector import enumerate_gpu_configs, ranking_quality
 from repro.core.specs import lbm_d3q15, star_stencil_3d
 
 from .common import SMALL_A100, configs_512, emit, timed
@@ -54,11 +65,51 @@ def run_app(name, spec, configs):
     return q
 
 
+def engine_speedup():
+    """Full paper grid on A100: seed serial path vs the exploration engine."""
+    spec = star_stencil_3d(r=4, domain=(48, 96, 128))
+    configs = enumerate_gpu_configs(1024)
+
+    # seed serial path: one monolithic estimate per config, no sharing
+    t0 = time.perf_counter()
+    serial = []
+    for cfg in configs:
+        try:
+            serial.append((cfg, estimate_gpu(spec, cfg, A100)))
+        except (ValueError, RuntimeError):
+            continue
+    serial.sort(key=lambda t: -t[1].perf_lups)
+    t_serial = time.perf_counter() - t0
+
+    t0 = time.perf_counter()
+    report = Explorer(parallel=True).rank_gpu(spec, A100, configs)
+    t_engine = time.perf_counter() - t0
+
+    identical = len(report.entries) == len(serial) and all(
+        e.config == cfg and e.estimate.perf_lups == est.perf_lups
+        and e.limiter == est.limiter
+        for e, (cfg, est) in zip(report.entries, serial)
+    )
+    speedup = t_serial / t_engine
+    best = report.entries[0]
+    emit(
+        "perf_ranking/engine/paper_grid_a100",
+        t_engine * 1e6,
+        f"n={len(configs)};serial_s={t_serial:.1f};engine_s={t_engine:.1f};"
+        f"speedup={speedup:.2f}x;identical_ranking={identical};"
+        f"best={best.config.block}x{best.config.folding};"
+        f"cache_hits={report.cache_stats['hits']}",
+    )
+    assert identical, "engine ranking must be bitwise-identical to serial"
+    assert speedup >= 3.0, f"engine speedup {speedup:.2f}x < 3x"
+
+
 def main():
     q1 = run_app("stencil3d25", star_stencil_3d(r=4, domain=(48, 96, 128)), configs_512())
     q2 = run_app("lbm", lbm_d3q15(domain=(24, 48, 64)), configs_512()[:8])
     # paper finds 96% efficiency for the stencil; we require the same class
     assert q1["efficiency"] > 0.85, q1
+    engine_speedup()
 
 
 if __name__ == "__main__":

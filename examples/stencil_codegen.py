@@ -1,10 +1,10 @@
 """Code generation + analytical selection, the pystencils integration (§1.2).
 
 Builds the paper's two applications — the range-4 3D25pt star stencil and the
-D3Q15 Allen-Cahn LBM interface-tracking kernel — from their specs, shows the
-generator's decision space with the estimator's pricing of every candidate,
-runs the selected kernels (interpret mode), and validates against the
-pure-jnp oracles.
+D3Q15 Allen-Cahn LBM interface-tracking kernel — from their specs, prices the
+generators' full decision space through the exploration engine in one
+``Explorer.explore()`` sweep, runs the selected kernels (interpret mode), and
+validates against the pure-jnp oracles.
 
 Run:  PYTHONPATH=src python examples/stencil_codegen.py
 """
@@ -12,7 +12,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.tpu_adapt import estimate_pallas
+from repro.core.engine import Explorer, Workload
+from repro.core.machines import TPU_V5E
 from repro.kernels.lbm_d3q15.generator import candidate_specs as lbm_candidates
 from repro.kernels.lbm_d3q15.ops import lbm_step
 from repro.kernels.lbm_d3q15.ref import WEIGHTS, lbm_step_ref, pad_inputs
@@ -20,19 +21,34 @@ from repro.kernels.stencil3d25.generator import candidate_specs as st_candidates
 from repro.kernels.stencil3d25.ops import star_stencil
 from repro.kernels.stencil3d25.ref import pad_input, star_stencil_ref, star_weights
 
-# ---- decision space for the paper's production stencil domain ------------
-print("stencil 3D25pt, domain (512, 512, 640), f64 — generator candidates:")
-for cfg, spec in st_candidates(4, (512, 512, 640), elem_bytes=8):
-    est = estimate_pallas(spec)
-    flag = "" if est.feasible else "  [VMEM layer condition violated]"
-    print(f"  {str(cfg):38s} {est.bytes_per_work:6.1f} B/pt  "
-          f"t={est.total_time*1e3:7.2f} ms  {est.limiter:5s}{flag}")
+# ---- decision space for the paper's production domains -------------------
+# one sweep prices both generators' candidate spaces; infeasible candidates
+# (violated VMEM layer condition) land in report.skipped with their reason
+report = Explorer().explore(
+    [
+        Workload("stencil3d25",
+                 tpu_candidates=list(st_candidates(4, (512, 512, 640),
+                                                   elem_bytes=8))),
+        Workload("lbm_d3q15",
+                 tpu_candidates=list(lbm_candidates((256, 256, 256),
+                                                    elem_bytes=8))[:5]),
+    ],
+    [TPU_V5E],
+)
 
-print("\nLBM D3Q15, domain (256, 256, 256), f64 — generator candidates:")
-for cfg, spec in list(lbm_candidates((256, 256, 256), elem_bytes=8))[:5]:
-    est = estimate_pallas(spec)
-    print(f"  {str(cfg):38s} {est.bytes_per_work:6.1f} B/LUP "
-          f"t={est.total_time*1e3:7.2f} ms  {est.limiter}")
+print("stencil 3D25pt, domain (512, 512, 640), f64 — ranked candidates:")
+for e in report.ranking("stencil3d25"):
+    print(f"  {str(e.config):38s} {e.estimate.bytes_per_work:6.1f} B/pt  "
+          f"t={e.estimate.total_time*1e3:7.2f} ms  {e.limiter}")
+for s in report.skipped_for("stencil3d25"):
+    print(f"  {str(s.config):38s} skipped: {s.reason}")
+
+print("\nLBM D3Q15, domain (256, 256, 256), f64 — ranked candidates:")
+for e in report.ranking("lbm_d3q15"):
+    print(f"  {str(e.config):38s} {e.estimate.bytes_per_work:6.1f} B/LUP "
+          f"t={e.estimate.total_time*1e3:7.2f} ms  {e.limiter}")
+
+print(f"\nengine: {report.summary()}")
 
 # ---- run the selected kernels on small domains and validate --------------
 print("\nrunning selected kernels (interpret mode) vs oracles:")

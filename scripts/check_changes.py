@@ -1,0 +1,59 @@
+#!/usr/bin/env python3
+"""CI guard: every PR must append its summary line to CHANGES.md.
+
+Determines the diff base (``$GITHUB_BASE_REF`` on pull_request events, else
+merge-base with the default branch) and fails when the diff is non-empty but
+touches no CHANGES.md line.  Exits 0 with a notice when no base can be
+determined (e.g. a push to the default branch itself).
+"""
+from __future__ import annotations
+
+import os
+import subprocess
+import sys
+
+
+def git(*args: str) -> str:
+    return subprocess.run(
+        ["git", *args], capture_output=True, text=True, check=True
+    ).stdout.strip()
+
+
+def resolve_base() -> str | None:
+    base_ref = os.environ.get("GITHUB_BASE_REF")
+    candidates = []
+    if base_ref:
+        candidates += [f"origin/{base_ref}", base_ref]
+    candidates += ["origin/main", "main", "origin/master"]
+    for ref in candidates:
+        try:
+            base = git("merge-base", ref, "HEAD")
+        except subprocess.CalledProcessError:
+            continue
+        if base and base != git("rev-parse", "HEAD"):
+            return base
+    return None
+
+
+def main() -> int:
+    base = resolve_base()
+    if base is None:
+        print("check_changes: no diff base found (push to default branch?) "
+              "— skipping")
+        return 0
+    changed = [f for f in git("diff", "--name-only", f"{base}...HEAD").splitlines() if f]
+    if not changed:
+        print("check_changes: empty diff — nothing to check")
+        return 0
+    if "CHANGES.md" in changed:
+        print(f"check_changes: OK ({len(changed)} files changed, "
+              "CHANGES.md updated)")
+        return 0
+    print("check_changes: FAIL — this PR does not update CHANGES.md.\n"
+          "Append one line describing the change so the next session "
+          "knows what's done.", file=sys.stderr)
+    return 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -9,13 +9,24 @@ The paper's contribution as a composable library:
     ``selector``) — the autotuning replacement
   * TPU-native adaptation for Pallas kernels (``tpu_adapt``)
   * mesh-level roofline from compiled HLO (``roofline``, ``hlo``)
+  * staged, memoized, parallel config-space exploration across all of the
+    above (``engine``) — one ``Explorer`` for GPU, TPU, and hypothetical
+    machines
 """
 from .access import Access, Field, KernelSpec, LaunchConfig
 from .capacity import CapacityModel, HitRateFit, gompertz
+from .engine import (
+    Explorer,
+    ExplorationReport,
+    EvalResult,
+    SkippedConfig,
+    Workload,
+)
 from .machines import A100, TPU_V5E, V100, GPUMachine, TPUMachine
 from .perfmodel import GPUEstimate, estimate_gpu
 from .selector import (
     RankedConfig,
+    RankingResult,
     enumerate_gpu_configs,
     rank_gpu_configs,
     ranking_quality,
@@ -35,10 +46,11 @@ from .roofline import RooflineReport, analyze_compiled, format_roofline_table
 __all__ = [
     "Access", "Field", "KernelSpec", "LaunchConfig",
     "CapacityModel", "HitRateFit", "gompertz",
+    "Explorer", "ExplorationReport", "EvalResult", "SkippedConfig", "Workload",
     "A100", "V100", "TPU_V5E", "GPUMachine", "TPUMachine",
     "GPUEstimate", "estimate_gpu",
-    "RankedConfig", "enumerate_gpu_configs", "rank_gpu_configs",
-    "ranking_quality", "select_gpu_config",
+    "RankedConfig", "RankingResult", "enumerate_gpu_configs",
+    "rank_gpu_configs", "ranking_quality", "select_gpu_config",
     "MatmulShape", "OperandSpec", "PallasEstimate", "PallasKernelSpec",
     "estimate_pallas", "fetch_count", "select_pallas_config",
     "RooflineReport", "analyze_compiled", "format_roofline_table",

@@ -1,0 +1,37 @@
+"""Unified exploration engine: staged, memoized, parallel config-space search.
+
+The paper's workflow (fig. 1) prices one configuration; this subsystem prices
+*spaces* — the full eq.-6 grid, multiple kernels, multiple (including
+hypothetical) machines — through a single ``Explorer`` API:
+
+    from repro.core.engine import Explorer, Workload
+
+    report = Explorer(parallel=True).explore(
+        [Workload("stencil", gpu_spec=spec, tpu_candidates=cands)],
+        [V100, A100, TPU_V5E],
+    )
+    print(report.comparison_table())
+
+See DESIGN.md §5 for the architecture and the ``Estimator`` protocol
+contract backends implement.
+"""
+from .backends import GPUBackend, PallasBackend
+from .explorer import Explorer, Workload
+from .invariants import InvariantCache
+from .pool import run_tasks
+from .protocol import (
+    Estimator,
+    EvalResult,
+    ExplorationReport,
+    SkipConfig,
+    SkippedConfig,
+    Task,
+)
+
+__all__ = [
+    "Explorer", "Workload",
+    "GPUBackend", "PallasBackend",
+    "InvariantCache", "run_tasks",
+    "Estimator", "EvalResult", "ExplorationReport",
+    "SkipConfig", "SkippedConfig", "Task",
+]

@@ -1,0 +1,165 @@
+"""Estimator-protocol backends over the GPU and TPU analytical models.
+
+GPU configurations are priced in three structural pieces with distinct
+sharing behaviour:
+
+  * ``block``  — interior-block footprints, keyed by the *block extent*
+    (machine-independent; different (block, folding) pairs fold to the same
+    extent).  Computed on the implicit-set path, which the tier-1 property
+    tests pin as exactly equal to the enumeration oracle.
+  * ``walk``   — L1 grid walk + per-warp sector requests, keyed by the full
+    (block, folding) launch (machine-independent: shared across machines).
+  * ``wave``   — wave-model footprint counts, keyed by extent + machine
+    *geometry* (SM count, sector/line size) but not cache sizes, so
+    hypothetical-GPU sweeps (e.g. doubled L2) share every count.
+
+``combine`` then applies capacity hit-rates and limiter arithmetic — the
+exact float operations of ``estimate_gpu``, so engine results are bitwise
+identical to the direct path.
+
+The Pallas backend wraps ``estimate_pallas`` (already cheap closed-form
+math): one task per (kernel spec, machine), with VMEM feasibility turned
+into a recorded skip reason.
+"""
+from __future__ import annotations
+
+from ..access import KernelSpec, LaunchConfig
+from ..capacity import CapacityModel
+from ..footprint import footprint_bytes
+from ..gridwalk import walk_block_l1_fast, warp_sector_requests_fast
+from ..machines import GPUMachine, TPUMachine
+from ..perfmodel import (
+    L1Parts,
+    _interior_block,
+    assemble_gpu_estimate,
+    dram_rates,
+    dram_structure,
+    l1_rates,
+)
+from .protocol import EvalResult, SkipConfig, Task
+
+
+# --------------------------------------------------------------------------
+# structural task functions (module-level: picklable for the worker pool)
+# --------------------------------------------------------------------------
+def _interior_boxes(spec: KernelSpec, launch: LaunchConfig, domain: tuple):
+    bidx = _interior_block(launch.grid_for(domain))
+    return launch.block_domain_boxes(bidx, domain)
+
+
+def gpu_block_task(spec: KernelSpec, launch: LaunchConfig, domain: tuple) -> tuple:
+    """Interior-block footprints (32B load/store sectors, 128B alloc lines)
+    via implicit sets — property-tested equal to the gridwalk oracle."""
+    boxes = _interior_boxes(spec, launch, domain)
+    return (
+        footprint_bytes(spec.loads, boxes, 32),
+        footprint_bytes(spec.accesses, boxes, 128),
+        footprint_bytes(spec.stores, boxes, 32),
+    )
+
+
+def gpu_walk_task(spec: KernelSpec, launch: LaunchConfig, domain: tuple) -> tuple:
+    """L1 bank-conflict cycles + per-warp sector-request upper bound, on the
+    vectorized walk (bitwise-equal to the per-warp loop oracle)."""
+    return (
+        walk_block_l1_fast(spec, launch, domain),
+        warp_sector_requests_fast(spec, launch, 32, domain),
+    )
+
+
+def gpu_wave_task(spec: KernelSpec, launch: LaunchConfig, machine: GPUMachine,
+                  domain: tuple) -> dict:
+    """Wave-model structural counts; the interior-block store footprint is
+    fed from the implicit-set path (== oracle) instead of re-enumerating."""
+    store_bytes = footprint_bytes(
+        spec.stores, _interior_boxes(spec, launch, domain), machine.sector_bytes
+    )
+    return dram_structure(spec, launch, machine, domain,
+                          block_store_bytes=store_bytes)
+
+
+class GPUBackend:
+    """Estimator-protocol backend over the multi-limiter GPU model."""
+
+    name = "gpu"
+
+    def __init__(self, spec: KernelSpec, capacity: CapacityModel | None = None,
+                 domain: tuple | None = None):
+        self.spec = spec
+        self.capacity = capacity or CapacityModel()
+        self.domain = domain or spec.domain
+
+    def _keys(self, launch: LaunchConfig, machine: GPUMachine) -> tuple:
+        """Structural keys (block, walk, wave) — single source of truth for
+        both task emission and combine lookup."""
+        spec, domain = self.spec, self.domain
+        extent = launch.block_extent()
+        geom = (machine.n_sms, machine.max_threads_per_sm,
+                machine.sector_bytes, machine.line_bytes)
+        return (
+            ("gpu-block", spec, extent, domain),
+            ("gpu-walk", spec, launch.block, launch.folding, domain),
+            ("gpu-wave", spec, extent, launch.threads, geom, domain),
+        )
+
+    # items are LaunchConfigs
+    def structural_tasks(self, launch: LaunchConfig,
+                         machine: GPUMachine) -> list:
+        spec, domain = self.spec, self.domain
+        k_block, k_walk, k_wave = self._keys(launch, machine)
+        return [
+            Task(k_block, gpu_block_task, (spec, launch, domain)),
+            Task(k_walk, gpu_walk_task, (spec, launch, domain)),
+            Task(k_wave, gpu_wave_task, (spec, launch, machine, domain)),
+        ]
+
+    def combine(self, launch: LaunchConfig, machine: GPUMachine,
+                values: dict) -> tuple:
+        spec, domain = self.spec, self.domain
+        k_block, k_walk, k_wave = self._keys(launch, machine)
+        v_comp, v_alloc, v_store = values[k_block]
+        cycles, v_up = values[k_walk]
+        struct = values[k_wave]
+        l1 = l1_rates(
+            L1Parts(cycles_per_lup=cycles, v_comp=v_comp, v_up=v_up,
+                    v_alloc=v_alloc, v_store=v_store),
+            launch, machine, self.capacity,
+        )
+        dram = dram_rates(struct, machine, self.capacity)
+        est = assemble_gpu_estimate(spec, launch, machine, domain, l1, dram)
+        return launch, est, est.perf_lups, est.limiter
+
+    def sort_key(self, result: EvalResult) -> tuple:
+        return (-result.perf,)
+
+
+# --------------------------------------------------------------------------
+def pallas_task(spec, machine: TPUMachine):
+    from ..tpu_adapt import estimate_pallas
+
+    return estimate_pallas(spec, machine)
+
+
+class PallasBackend:
+    """Estimator-protocol backend over the TPU/Pallas analytical model."""
+
+    name = "pallas"
+
+    # items are (config_dict, PallasKernelSpec) candidates
+    def structural_tasks(self, item, machine: TPUMachine) -> list:
+        _, spec = item
+        return [Task(("pallas", spec, machine), pallas_task, (spec, machine))]
+
+    def combine(self, item, machine: TPUMachine, values: dict) -> tuple:
+        config, spec = item
+        est = values[("pallas", spec, machine)]
+        if not est.feasible:
+            raise SkipConfig(
+                f"VMEM layer condition violated: {est.vmem_alloc_bytes} B "
+                f"allocated > {machine.vmem_bytes} B VMEM"
+            )
+        return config, est, est.work_rate, est.limiter
+
+    def sort_key(self, result: EvalResult) -> tuple:
+        # predicted time ascending; ties toward smaller VMEM footprints
+        return (result.estimate.total_time, result.estimate.vmem_alloc_bytes)

@@ -1,0 +1,228 @@
+"""The staged exploration engine (DESIGN.md §5).
+
+One ``Explorer`` ranks GPU, TPU, and hypothetical machines through a single
+API.  Pricing a configuration space runs in four stages:
+
+  1. **enumerate** — collect the candidate configurations per (workload,
+     machine) cell and ask the backend for their structural tasks;
+  2. **dedupe** — resolve structural keys against the invariant cache, so
+     footprint boxes, wave sets, and grid walks are computed once per
+     structural equivalence class, not once per configuration;
+  3. **evaluate** — run the missing tasks through the worker pool (batched,
+     deterministic result ordering; errors become outcomes, not crashes);
+  4. **combine & rank** — fold cached values into estimates with the
+     backend's (cheap, exact) combine arithmetic, record skipped
+     configurations with reasons, and stable-sort by the backend's key.
+
+The cache persists across calls, so a multi-machine or multi-kernel sweep
+(``explore``) pays for shared structure only once.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass
+from typing import Iterable, Sequence
+
+from ..capacity import CapacityModel
+from ..machines import GPUMachine, TPUMachine, TPU_V5E
+from .backends import GPUBackend, PallasBackend
+from .invariants import InvariantCache
+from .pool import run_tasks
+from .protocol import (
+    EvalResult,
+    ExplorationReport,
+    SkipConfig,
+    SkippedConfig,
+)
+
+
+@dataclass
+class Workload:
+    """One kernel as seen by every backend the sweep may touch.
+
+    ``gpu_spec`` feeds GPU machines (with ``gpu_configs`` or the paper's
+    eq.-6 grid); ``tpu_candidates`` — ``(config_dict, PallasKernelSpec)``
+    pairs, typically from a kernel generator's ``candidate_specs`` — feed
+    TPU machines.
+    """
+
+    name: str
+    gpu_spec: object | None = None
+    gpu_configs: Sequence | None = None
+    tpu_candidates: Sequence | None = None
+    capacity: CapacityModel | None = None
+
+
+class Explorer:
+    """Staged, memoized, optionally parallel config-space search."""
+
+    def __init__(self, *, parallel: bool = False, max_workers: int | None = None,
+                 cache: InvariantCache | None = None, strict: bool = False):
+        self.parallel = parallel
+        self.max_workers = max_workers
+        self.cache = cache or InvariantCache()
+        self.strict = strict
+
+    # ---- single-cell entry points --------------------------------------
+    def rank_gpu(self, spec, machine: GPUMachine, configs=None, *,
+                 capacity: CapacityModel | None = None,
+                 total_threads: int = 1024, strict: bool | None = None,
+                 progress=None) -> ExplorationReport:
+        """Rank launch configurations of one kernel on one GPU machine."""
+        if configs is None:
+            from ..selector import enumerate_gpu_configs
+
+            configs = enumerate_gpu_configs(total_threads)
+        backend = GPUBackend(spec, capacity)
+        return self._sweep(
+            [(spec.name, backend, list(configs), machine)],
+            strict=strict, progress=progress,
+        )
+
+    def rank_pallas(self, candidates: Iterable,
+                    machine: TPUMachine = TPU_V5E, *,
+                    workload: str | None = None,
+                    strict: bool | None = None) -> ExplorationReport:
+        """Rank (config, PallasKernelSpec) candidates on one TPU machine."""
+        candidates = list(candidates)
+        name = workload or (candidates[0][1].name if candidates else "pallas")
+        return self._sweep(
+            [(name, PallasBackend(), candidates, machine)], strict=strict
+        )
+
+    # ---- sweep front-end ----------------------------------------------
+    def explore(self, workloads, machines, configs=None, *,
+                strict: bool | None = None) -> ExplorationReport:
+        """Price every workload on every machine in one call.
+
+        ``workloads``: Workload instances (a bare KernelSpec is promoted to a
+        GPU-only workload).  ``machines``: GPUMachine / TPUMachine mix.
+        ``configs`` optionally overrides the GPU config list for all
+        workloads.  Machines a workload defines no candidates for are
+        recorded in ``report.skipped`` rather than silently ignored.
+        """
+        workloads = [
+            w if isinstance(w, Workload) else Workload(name=w.name, gpu_spec=w)
+            for w in _as_list(workloads)
+        ]
+        machines = _as_list(machines)
+        cells, undefined = [], []
+        for w in workloads:
+            for m in machines:
+                if isinstance(m, GPUMachine):
+                    if w.gpu_spec is None:
+                        undefined.append((w, m, "no GPU kernel spec defined"))
+                        continue
+                    gpu_configs = configs if configs is not None else w.gpu_configs
+                    if gpu_configs is None:
+                        from ..selector import enumerate_gpu_configs
+
+                        gpu_configs = enumerate_gpu_configs()
+                    cells.append((w.name, GPUBackend(w.gpu_spec, w.capacity),
+                                  list(gpu_configs), m))
+                elif isinstance(m, TPUMachine):
+                    if w.tpu_candidates is None:
+                        undefined.append(
+                            (w, m, "no Pallas candidates defined"))
+                        continue
+                    cells.append((w.name, PallasBackend(),
+                                  list(w.tpu_candidates), m))
+                else:
+                    undefined.append(
+                        (w, m, f"no backend for machine type "
+                               f"{type(m).__name__}"))
+        report = self._sweep(cells, strict=strict)
+        for w, m, reason in undefined:
+            report.skipped.append(
+                SkippedConfig(w.name, m.name, None, reason))
+        return report
+
+    # ---- the staged core ----------------------------------------------
+    def _sweep(self, cells, *, strict: bool | None = None,
+               progress=None) -> ExplorationReport:
+        strict = self.strict if strict is None else strict
+        t0 = time.perf_counter()
+        hits0, misses0 = self.cache.hits, self.cache.misses
+        # stage 1: enumerate items and their structural tasks
+        cell_tasks = []   # parallel to cells: list[list[Task]] per item
+        pending = {}      # key -> (fn, args), first-seen order
+        for _, backend, items, machine in cells:
+            tasks_per_item = [backend.structural_tasks(it, machine)
+                              for it in items]
+            cell_tasks.append(tasks_per_item)
+            # stage 2: dedupe against the invariant cache; a hit is a task
+            # evaluation avoided (cached earlier or already queued this sweep)
+            for tl in tasks_per_item:
+                for t in tl:
+                    if t.key in pending:
+                        self.cache.count_hit()
+                    elif self.cache.lookup(t.key) is None:
+                        pending[t.key] = (t.fn, t.args)
+        # stage 3: batched evaluation, deterministic ordering
+        outcomes = run_tasks(list(pending.values()), parallel=self.parallel,
+                             max_workers=self.max_workers)
+        for key, outcome in zip(pending, outcomes):
+            self.cache.store(key, outcome)
+        # stage 4: combine + rank per cell
+        report = ExplorationReport()
+        for (wname, backend, items, machine), tasks_per_item in zip(
+                cells, cell_tasks):
+            results = []
+            for idx, (item, tl) in enumerate(zip(items, tasks_per_item)):
+                values, err = {}, None
+                for t in tl:
+                    status, val = self.cache.peek(t.key)
+                    if status == "err":
+                        # estimation errors become skips; anything else is a
+                        # programming error and propagates, matching what the
+                        # monolithic path (and the combine stage) would do
+                        if not isinstance(val, (SkipConfig, ValueError,
+                                                RuntimeError)):
+                            raise val
+                        err = val
+                        break
+                    values[t.key] = val
+                if err is None:
+                    try:
+                        config, est, perf, limiter = backend.combine(
+                            item, machine, values)
+                        results.append(EvalResult(
+                            workload=wname, machine=machine.name,
+                            backend=backend.name, index=idx, config=config,
+                            estimate=est, perf=perf, limiter=limiter))
+                    except (SkipConfig, ValueError, RuntimeError) as exc:
+                        err = exc
+                if err is not None:
+                    if strict and not isinstance(err, SkipConfig):
+                        raise err
+                    report.skipped.append(SkippedConfig(
+                        wname, machine.name, _item_config(item),
+                        f"{type(err).__name__}: {err}"))
+                if progress:
+                    progress(idx + 1, len(items))
+            results.sort(key=backend.sort_key)
+            report.entries.extend(results)
+        # per-sweep deltas (a reused Explorer's cache is cumulative)
+        report.cache_stats = {
+            "hits": self.cache.hits - hits0,
+            "misses": self.cache.misses - misses0,
+            "entries": len(self.cache),
+        }
+        report.wall_time_s = time.perf_counter() - t0
+        return report
+
+
+def _item_config(item):
+    """The user-facing config of a backend item ((config, spec) or config)."""
+    if isinstance(item, tuple) and len(item) == 2:
+        return item[0]
+    return item
+
+
+def _as_list(x):
+    if x is None:
+        return []
+    try:
+        return list(x)
+    except TypeError:
+        return [x]

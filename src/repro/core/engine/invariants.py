@@ -1,0 +1,61 @@
+"""Per-kernel invariant cache (the engine's memoization layer).
+
+Structural computations — footprint boxes, wave sets, layer-set footprints,
+grid walks — are pure functions of ``(spec, block extent, grid, machine
+geometry)``.  The paper's 1024-thread configuration grid has heavy structural
+overlap: different (block, folding) pairs fold to the same block extent, and
+machines differing only in cache sizes share every count.  The cache stores
+each value once under its structural key; errors are cached too, so a whole
+family of configurations sharing a degenerate extent is skipped in O(1).
+
+Entries are ``("ok", value)`` or ``("err", exception)`` outcome pairs — the
+same shape the worker pool returns — so pool results can be stored verbatim.
+"""
+from __future__ import annotations
+
+from typing import Hashable
+
+
+class InvariantCache:
+    """Outcome store keyed by structural keys, with hit/miss accounting."""
+
+    def __init__(self):
+        self._store: dict = {}
+        self.hits = 0
+        self.misses = 0
+
+    def __contains__(self, key: Hashable) -> bool:
+        return key in self._store
+
+    def __len__(self) -> int:
+        return len(self._store)
+
+    def lookup(self, key: Hashable):
+        """Return the cached outcome pair or None, counting a hit (a task
+        evaluation avoided) or a miss (a task that must be computed)."""
+        out = self._store.get(key)
+        if out is None:
+            self.misses += 1
+        else:
+            self.hits += 1
+        return out
+
+    def peek(self, key: Hashable):
+        """Uncounted read — for result assembly, not sharing decisions."""
+        return self._store.get(key)
+
+    def count_hit(self) -> None:
+        """Record sharing that bypasses the store (intra-sweep dedupe of a
+        task already queued for evaluation)."""
+        self.hits += 1
+
+    def store(self, key: Hashable, outcome: tuple) -> None:
+        self._store[key] = outcome
+
+    def stats(self) -> dict:
+        return {"hits": self.hits, "misses": self.misses,
+                "entries": len(self._store)}
+
+    def clear(self) -> None:
+        self._store.clear()
+        self.hits = self.misses = 0

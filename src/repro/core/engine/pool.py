@@ -1,0 +1,84 @@
+"""Batched parallel task evaluation with deterministic result ordering.
+
+Structural tasks are pure and independent, so they parallelize across a
+process pool (the estimator is pure Python; threads would serialize on the
+GIL).  Results are gathered in submission order — parallelism never changes
+what the engine computes, only how fast.
+
+Every task is wrapped so worker exceptions come back as values: the engine
+turns them into skipped-config records (or re-raises under strict mode)
+instead of tearing down the whole sweep.
+"""
+from __future__ import annotations
+
+import multiprocessing
+import os
+import sys
+from concurrent.futures import ProcessPoolExecutor
+from typing import Sequence
+
+
+def guarded_call(fn, args) -> tuple:
+    """Run one task, capturing the outcome as ``("ok", value)`` or
+    ``("err", exception)``."""
+    try:
+        return ("ok", fn(*args))
+    except Exception as exc:  # noqa: BLE001 — outcome-ified for the engine
+        return ("err", exc)
+
+
+def default_workers() -> int:
+    return max(os.cpu_count() or 1, 1)
+
+
+def _context():
+    """Pick a start method: plain fork is fastest, but forking a process
+    whose XLA/JAX runtime already spawned threads can deadlock — fall back
+    to forkserver (workers fork from a clean server process) once jax is
+    loaded, then to the platform default."""
+    methods = multiprocessing.get_all_start_methods()
+    if "fork" in methods and "jax" not in sys.modules:
+        return multiprocessing.get_context("fork")
+    if "forkserver" in methods and _main_reimportable():
+        return multiprocessing.get_context("forkserver")
+    if "spawn" in methods and _main_reimportable():
+        return multiprocessing.get_context("spawn")
+    return None  # no safe pool (jax loaded + un-reimportable main): serial
+
+
+def _main_reimportable() -> bool:
+    """Non-fork start methods re-run __main__ in the worker; that breaks for
+    stdin/interactive parents, so detect a real module or file."""
+    main = sys.modules.get("__main__")
+    if main is None:
+        return False
+    if getattr(main, "__spec__", None) is not None:  # python -m ...
+        return True
+    path = getattr(main, "__file__", None)
+    return bool(path) and os.path.exists(path)
+
+
+def run_tasks(
+    calls: Sequence[tuple],
+    parallel: bool = False,
+    max_workers: int | None = None,
+) -> list:
+    """Evaluate ``[(fn, args), ...]`` and return outcomes in input order.
+
+    ``parallel=True`` uses a fork-based process pool (falling back to the
+    serial path when only one worker is available, the batch is tiny, or no
+    usable multiprocessing start method exists).
+    """
+    calls = list(calls)
+    workers = max_workers or default_workers()
+    ctx = _context() if parallel else None
+    if ctx is not None and workers > 1 and len(calls) > 1:
+        try:
+            with ProcessPoolExecutor(max_workers=min(workers, len(calls)),
+                                     mp_context=ctx) as ex:
+                futures = [ex.submit(guarded_call, fn, args)
+                           for fn, args in calls]
+                return [f.result() for f in futures]
+        except (OSError, ValueError, RuntimeError):
+            pass  # pool unavailable (e.g. sandboxed) — fall through to serial
+    return [guarded_call(fn, args) for fn, args in calls]

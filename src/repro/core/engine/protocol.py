@@ -1,0 +1,183 @@
+"""Backend-agnostic exploration contract (DESIGN.md §5).
+
+The paper's promise — "quick exploration of large configuration spaces" — is
+made concrete here as a small protocol every estimator backend implements.
+A backend splits pricing one configuration into
+
+  * **structural tasks**: pure, expensive computations (grid walks, footprint
+    unions, wave counting) identified by a *structural key*; configurations
+    and machines that share a key share the computation, and tasks are safe
+    to evaluate in a worker pool, and
+  * **combine**: cheap arithmetic (capacity hit-rates, limiter minima) that
+    folds resolved task values into a final estimate.
+
+The ``Explorer`` (engine.explorer) drives the stages; backends never need to
+know about caching or parallelism.
+"""
+from __future__ import annotations
+
+from collections import Counter
+from dataclasses import dataclass, field as dc_field
+from typing import Any, Callable, Hashable, Mapping, Protocol, Sequence, runtime_checkable
+
+
+@dataclass(frozen=True)
+class Task:
+    """One structural computation: ``fn(*args)`` cached under ``key``.
+
+    ``fn`` must be a module-level callable (picklable) and a pure function of
+    ``args``; ``key`` must capture everything the result depends on.
+    """
+
+    key: Hashable
+    fn: Callable
+    args: tuple
+
+
+class SkipConfig(Exception):
+    """Raised by a backend's ``combine`` to drop a configuration with a
+    recorded reason (e.g. a violated feasibility constraint)."""
+
+
+@dataclass
+class EvalResult:
+    """One priced configuration, comparable across backends via ``perf``
+    (work units per second, higher is better)."""
+
+    workload: str
+    machine: str
+    backend: str
+    index: int                # enumeration order within the cell
+    config: Any               # LaunchConfig (GPU) or config dict (Pallas)
+    estimate: Any             # GPUEstimate or PallasEstimate
+    perf: float
+    limiter: str
+
+
+@dataclass
+class SkippedConfig:
+    """A configuration the engine could not (or refused to) price."""
+
+    workload: str
+    machine: str
+    config: Any
+    reason: str
+
+
+@runtime_checkable
+class Estimator(Protocol):
+    """What the Explorer requires of a backend (contract in DESIGN.md §5)."""
+
+    name: str
+
+    def structural_tasks(self, item: Any, machine: Any) -> Sequence[Task]:
+        """Structural computations needed to price ``item`` on ``machine``."""
+        ...
+
+    def combine(self, item: Any, machine: Any,
+                values: Mapping[Hashable, Any]) -> tuple:
+        """Fold resolved task values into ``(config, estimate, perf,
+        limiter)``.  May raise ``SkipConfig`` (or ValueError/RuntimeError)
+        to drop the configuration."""
+        ...
+
+    def sort_key(self, result: EvalResult) -> tuple:
+        """Ranking key, best first (applied with a stable sort over
+        enumeration order)."""
+        ...
+
+
+@dataclass
+class ExplorationReport:
+    """Structured result of an exploration sweep.
+
+    ``entries`` hold every feasible priced configuration, ranked within each
+    (workload, machine) cell; ``skipped`` records every dropped configuration
+    with its reason — nothing is silently swallowed.
+    """
+
+    entries: list = dc_field(default_factory=list)        # list[EvalResult]
+    skipped: list = dc_field(default_factory=list)        # list[SkippedConfig]
+    cache_stats: dict = dc_field(default_factory=dict)
+    wall_time_s: float = 0.0
+
+    # ---- structure -----------------------------------------------------
+    def cells(self) -> list:
+        """Distinct (workload, machine) pairs, in first-seen order."""
+        seen, out = set(), []
+        for e in self.entries:
+            k = (e.workload, e.machine)
+            if k not in seen:
+                seen.add(k)
+                out.append(k)
+        return out
+
+    def ranking(self, workload: str | None = None,
+                machine: str | None = None) -> list:
+        return [
+            e for e in self.entries
+            if (workload is None or e.workload == workload)
+            and (machine is None or e.machine == machine)
+        ]
+
+    def best(self, workload: str | None = None, machine: str | None = None):
+        r = self.ranking(workload, machine)
+        return r[0] if r else None
+
+    def skipped_for(self, workload: str | None = None,
+                    machine: str | None = None) -> list:
+        return [
+            s for s in self.skipped
+            if (workload is None or s.workload == workload)
+            and (machine is None or s.machine == machine)
+        ]
+
+    # ---- attribution ---------------------------------------------------
+    def limiter_attribution(self, workload: str | None = None) -> dict:
+        """(workload, machine) -> {limiter: config count} over all priced
+        configurations — which hardware resource bounds each region of the
+        config space (the insight black-box tuning cannot give)."""
+        out: dict = {}
+        for e in self.entries:
+            if workload is not None and e.workload != workload:
+                continue
+            out.setdefault((e.workload, e.machine), Counter())[e.limiter] += 1
+        return {k: dict(v) for k, v in out.items()}
+
+    # ---- presentation --------------------------------------------------
+    def comparison_table(self, workload: str | None = None) -> str:
+        """Cross-machine comparison of each cell's best configuration."""
+        rows = [("workload", "machine", "best config", "perf [work/s]",
+                 "limiter", "priced", "skipped")]
+        for w, m in self.cells():
+            if workload is not None and w != workload:
+                continue
+            b = self.best(w, m)
+            rows.append((
+                w, m, _fmt_config(b.config), f"{b.perf:.3e}", b.limiter,
+                str(len(self.ranking(w, m))), str(len(self.skipped_for(w, m))),
+            ))
+        widths = [max(len(r[i]) for r in rows) for i in range(len(rows[0]))]
+        lines = ["  ".join(c.ljust(wd) for c, wd in zip(r, widths)).rstrip()
+                 for r in rows]
+        lines.insert(1, "-" * len(lines[0]))
+        return "\n".join(lines)
+
+    def summary(self) -> str:
+        n_cells = len(self.cells())
+        return (
+            f"{len(self.entries)} configs priced across {n_cells} "
+            f"(workload, machine) cells, {len(self.skipped)} skipped; "
+            f"invariant cache: {self.cache_stats.get('hits', 0)} hits / "
+            f"{self.cache_stats.get('misses', 0)} misses; "
+            f"{self.wall_time_s:.2f}s wall"
+        )
+
+
+def _fmt_config(config) -> str:
+    # LaunchConfig prints block x folding; dict configs print compactly
+    if hasattr(config, "block"):
+        return f"{config.block}x{config.folding}"
+    if isinstance(config, dict):
+        return ",".join(f"{k}={v}" for k, v in config.items())
+    return str(config)

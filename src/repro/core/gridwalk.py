@@ -130,15 +130,9 @@ def walk_block_l1(
     load instruction per folding iteration.
     """
     domain = domain or spec.domain
-    pts = block_points(launch, domain)
-    fold = int(np.prod(launch.folding))
+    pts_tm = _thread_major_points(launch, domain)
+    fold = pts_tm.shape[1]
     n_threads = launch.threads
-    cycles = 0
-    # points are thread-major: reshape (threads, fold, 3)
-    pts_tm = pts.reshape(-1, fold, 3) if len(pts) == n_threads * fold else None
-    if pts_tm is None:
-        # guard-clipped block: fall back to per-half-warp masking
-        pts_tm = _clipped_thread_major(launch, domain)
     vis = BankConflictVisitor()
     for acc in spec.accesses:
         for w0 in range(0, n_threads, half_warp):
@@ -149,7 +143,7 @@ def walk_block_l1(
                 if len(sl) == 0:
                     continue
                 vis.count(acc.field.name, access_addresses(acc, sl, len(domain)))
-    lups = len(pts)
+    lups = int((pts_tm[:, :, 0] >= 0).sum())
     return vis.cycles / max(lups, 1)
 
 
@@ -178,6 +172,97 @@ def _clipped_thread_major(launch: LaunchConfig, domain):
                 out[:, j, :] = col
                 j += 1
     return out
+
+
+# --------------------------------------------------------------------------
+# Vectorized walks (exact replicas of the per-warp loops above)
+# --------------------------------------------------------------------------
+# Pads invalid threads in the row-wise sorts below.  Large positive so padded
+# entries sort *after* every real key (a valid entry never has a padded
+# predecessor, keeping the first-occurrence masks exact); real keys are
+# bounded by field sizes and can never reach it.
+_SENTINEL = np.int64(1) << 62
+
+
+def _thread_major_points(launch: LaunchConfig, domain) -> np.ndarray:
+    """(threads, fold, 3) thread-major points with -1-marked invalid rows."""
+    pts = block_points(launch, domain)
+    fold = int(np.prod(launch.folding))
+    if len(pts) == launch.threads * fold:
+        return pts.reshape(-1, fold, 3)
+    return _clipped_thread_major(launch, domain)
+
+
+def _rowwise_group_stats(keys: np.ndarray, group: int, n_rows: int):
+    """Shared core of the vectorized walks: sort ``keys`` (padded with
+    _SENTINEL for invalid threads) within rows of ``group`` threads and
+    return (sorted_keys, unique-mask, row_index) for counting row-unique
+    values exactly as per-warp ``np.unique`` calls do."""
+    pad = n_rows * group - len(keys)
+    if pad:
+        keys = np.concatenate([keys, np.full(pad, _SENTINEL, dtype=np.int64)])
+    rows = keys.reshape(n_rows, group)
+    s = np.sort(rows, axis=1)
+    uniq = np.ones_like(s, dtype=bool)
+    uniq[:, 1:] = s[:, 1:] != s[:, :-1]
+    uniq &= s != _SENTINEL
+    row_idx = np.broadcast_to(np.arange(n_rows)[:, None], s.shape)
+    return s, uniq, row_idx
+
+
+def walk_block_l1_fast(
+    spec: KernelSpec, launch: LaunchConfig, domain=None, half_warp: int = 16
+):
+    """Vectorized ``walk_block_l1``: one numpy pass per (access, folding
+    iteration) instead of one per half warp.  Bitwise-identical cycle counts
+    (pinned by tests/test_engine.py against the loop oracle)."""
+    domain = domain or spec.domain
+    pts_tm = _thread_major_points(launch, domain)
+    fold = pts_tm.shape[1]
+    n_threads = launch.threads
+    n_rows = -(-n_threads // half_warp)
+    cycles = 0
+    vis = BankConflictVisitor
+    for acc in spec.accesses:
+        for j in range(fold):
+            sl = pts_tm[:, j, :]
+            valid = sl[:, 0] >= 0
+            addr = access_addresses(acc, sl, len(domain))
+            words = np.where(valid, addr // vis.BANK_BYTES, _SENTINEL)
+            s, uniq, row_idx = _rowwise_group_stats(words, half_warp, n_rows)
+            # per-row max addresses per bank among unique words
+            counts = np.zeros((n_rows, vis.N_BANKS), dtype=np.int64)
+            np.add.at(counts, (row_idx[uniq], (s % vis.N_BANKS)[uniq]), 1)
+            bank_max = counts.max(axis=1)
+            # per-row unique 1024B windows (monotone transform of sorted words)
+            win = s * vis.BANK_BYTES // vis.WINDOW
+            wfirst = np.ones_like(win, dtype=bool)
+            wfirst[:, 1:] = win[:, 1:] != win[:, :-1]
+            wfirst &= uniq
+            n_win = wfirst.sum(axis=1)
+            cycles += int(np.maximum(bank_max, n_win).sum())
+    lups = int((pts_tm[:, :, 0] >= 0).sum())
+    return cycles / max(lups, 1)
+
+
+def warp_sector_requests_fast(
+    spec: KernelSpec, launch: LaunchConfig, sector_bytes: int = 32, domain=None
+) -> int:
+    """Vectorized ``warp_sector_requests`` (exact, see walk_block_l1_fast)."""
+    domain = domain or spec.domain
+    pts_tm = _thread_major_points(launch, domain)
+    fold = pts_tm.shape[1]
+    n_rows = -(-launch.threads // 32)
+    total = 0
+    for acc in spec.loads:
+        for j in range(fold):
+            sl = pts_tm[:, j, :]
+            valid = sl[:, 0] >= 0
+            addr = access_addresses(acc, sl, len(domain))
+            sect = np.where(valid, addr // sector_bytes, _SENTINEL)
+            _, uniq, _ = _rowwise_group_stats(sect, 32, n_rows)
+            total += int(uniq.sum())
+    return total * sector_bytes
 
 
 def access_line_tuples(acc: Access, pts: np.ndarray, domain_ndim: int,

@@ -81,6 +81,9 @@ def _crt_intersect(r1: APRange, r2: APRange) -> APRange:
     hi = min(r1.last, r2.last)
     if lo > hi:
         return APRange(0, 1, 0)
+    if r1.step == 1 and r2.step == 1:
+        # contiguous intervals — the dominant case for address boxes
+        return APRange(lo, 1, hi - lo + 1)
     g = math.gcd(r1.step, r2.step)
     if (r2.start - r1.start) % g != 0:
         return APRange(0, 1, 0)
@@ -183,10 +186,14 @@ def count_union(boxes: Sequence[Box]) -> int:
     # normalize strides (rare path)
     if any(r.step != 1 and r.n > 1 for b in boxes for r in b):
         boxes = _expand_strided(boxes)
-    return _count_union_unit(boxes)
+    # duplicates cannot change a union; dropping them up front keeps the
+    # sweep's pairwise work quadratic in *distinct* boxes only
+    return _count_union_unit(list(dict.fromkeys(boxes)), {})
 
 
-def _count_union_unit(boxes: list[Box]) -> int:
+def _count_union_unit(boxes: list[Box], memo: dict | None = None) -> int:
+    if memo is None:
+        memo = {}
     ndim = len(boxes[0])
     if ndim == 1:
         ivals = sorted((b[0].start, b[0].last) for b in boxes)
@@ -207,7 +214,15 @@ def _count_union_unit(boxes: list[Box]) -> int:
         lo, hi = cuts[i], cuts[i + 1] - 1
         covering = [b[1:] for b in boxes if b[0].start <= lo and b[0].last >= hi]
         if covering:
-            total += (hi - lo + 1) * _count_union_unit(covering)
+            # adjacent slabs are often covered by the same sub-boxes; the
+            # per-call memo (set-keyed: union is order/multiplicity-blind)
+            # collapses those repeated sub-sweeps
+            key = frozenset(covering)
+            sub = memo.get(key)
+            if sub is None:
+                memo[key] = sub = _count_union_unit(
+                    list(dict.fromkeys(covering)), memo)
+            total += (hi - lo + 1) * sub
     return total
 
 

@@ -7,6 +7,14 @@ the bottleneck — insight black-box tuning cannot give.
 
 ``estimate_gpu`` is the estimator workflow of fig. 1: address expressions +
 launch config -> hardware metrics -> performance prediction.
+
+The pipeline is factored into *structural* stages (grid walks, footprint
+unions, wave-set counting — pure functions of ``(spec, launch geometry,
+machine geometry)``) and *rate* stages (capacity hit-rates and limiter
+arithmetic — cheap functions of the structural outputs plus cache sizes).
+The exploration engine (``repro.core.engine``) memoizes the structural stages
+across the configurations and machines that share them; calling the staged
+functions back-to-back is bitwise-identical to the original monolithic path.
 """
 from __future__ import annotations
 
@@ -17,7 +25,12 @@ from .access import KernelSpec, LaunchConfig
 from .capacity import CapacityModel
 from .footprint import footprint_boxes, footprint_bytes, overlap_bytes
 from .gridwalk import block_footprint_bytes, walk_block_l1, warp_sector_requests
-from .isets import count_intersection_of_unions, count_union
+from .isets import (
+    box_intersect,
+    box_is_empty,
+    count_intersection_of_unions,
+    count_union,
+)
 from .machines import GPUMachine
 from .wave import build_wave_sets, occupancy_blocks_per_sm
 
@@ -61,37 +74,75 @@ def _interior_block(grid: tuple) -> tuple:
     return (grid[0] // 2, grid[1] // 2, grid[2] // 2)
 
 
-def estimate_l1(spec: KernelSpec, launch: LaunchConfig, machine: GPUMachine,
-                capacity: CapacityModel, domain=None) -> dict:
-    """L1 cycles + L2<->L1 volumes for a representative interior block."""
+# --------------------------------------------------------------------------
+# L1 stage
+# --------------------------------------------------------------------------
+@dataclass(frozen=True)
+class L1Parts:
+    """Structural inputs of the L1 model — machine-independent except for the
+    32B-sector / 128B-line granularities shared by all supported GPUs."""
+
+    cycles_per_lup: float   # bank-conflict cycles (grid walk)
+    v_comp: int             # unique 32B load sectors of the block
+    v_up: int               # per-warp sector-request upper bound
+    v_alloc: int            # unique 128B lines of all accesses (L1 allocation)
+    v_store: int            # unique 32B store sectors
+
+
+def l1_parts(spec: KernelSpec, launch: LaunchConfig, domain=None) -> L1Parts:
+    """Compute the structural L1 metrics for a representative interior block
+    via the enumeration oracle (paper listing 5)."""
     domain = domain or spec.domain
     grid = launch.grid_for(domain)
     bidx = _interior_block(grid)
-    cycles = walk_block_l1(spec, launch, domain)
+    return L1Parts(
+        cycles_per_lup=walk_block_l1(spec, launch, domain),
+        v_comp=block_footprint_bytes(spec, launch, 32, "loads", domain, bidx),
+        v_up=warp_sector_requests(spec, launch, 32, domain),
+        v_alloc=block_footprint_bytes(spec, launch, 128, "all", domain, bidx),
+        v_store=block_footprint_bytes(spec, launch, 32, "stores", domain, bidx),
+    )
+
+
+def l1_rates(parts: L1Parts, launch: LaunchConfig, machine: GPUMachine,
+             capacity: CapacityModel) -> dict:
+    """Apply occupancy + capacity model to the structural L1 metrics."""
     pts = launch.points_per_block()
-    # compulsory: unique sectors of the whole block; upper bound: per-warp sums
-    v_comp = block_footprint_bytes(spec, launch, 32, "loads", domain, bidx)
-    v_up = warp_sector_requests(spec, launch, 32, domain)
-    v_alloc = block_footprint_bytes(spec, launch, 128, "all", domain, bidx)
     bps = occupancy_blocks_per_sm(launch, machine.max_threads_per_sm)
-    r_hit = capacity.hit_rate("l1_loads", v_alloc * bps, machine.l1_bytes)
-    v_cap = (1.0 - r_hit) * max(0.0, v_up - v_comp)
-    v_store = block_footprint_bytes(spec, launch, 32, "stores", domain, bidx)
+    r_hit = capacity.hit_rate("l1_loads", parts.v_alloc * bps, machine.l1_bytes)
+    v_cap = (1.0 - r_hit) * max(0.0, parts.v_up - parts.v_comp)
     return {
-        "cycles_per_lup": cycles,
-        "load_per_lup": (v_comp + v_cap) / pts,
-        "store_per_lup": v_store / pts,  # write-through, sector granular
-        "comp_per_lup": v_comp / pts,
+        "cycles_per_lup": parts.cycles_per_lup,
+        "load_per_lup": (parts.v_comp + v_cap) / pts,
+        "store_per_lup": parts.v_store / pts,  # write-through, sector granular
+        "comp_per_lup": parts.v_comp / pts,
         "cap_per_lup": v_cap / pts,
-        "upper_per_lup": v_up / pts,
-        "alloc_bytes": v_alloc,
+        "upper_per_lup": parts.v_up / pts,
+        "alloc_bytes": parts.v_alloc,
         "r_hit": r_hit,
     }
 
 
-def estimate_dram(spec: KernelSpec, launch: LaunchConfig, machine: GPUMachine,
-                  capacity: CapacityModel, domain=None) -> dict:
-    """DRAM<->L2 volumes via the wave model + layer-condition reuse (§4.4)."""
+def estimate_l1(spec: KernelSpec, launch: LaunchConfig, machine: GPUMachine,
+                capacity: CapacityModel, domain=None) -> dict:
+    """L1 cycles + L2<->L1 volumes for a representative interior block."""
+    domain = domain or spec.domain
+    return l1_rates(l1_parts(spec, launch, domain), launch, machine, capacity)
+
+
+# --------------------------------------------------------------------------
+# DRAM stage
+# --------------------------------------------------------------------------
+def dram_structure(spec: KernelSpec, launch: LaunchConfig, machine: GPUMachine,
+                   domain=None, block_store_bytes: int | None = None) -> dict:
+    """Wave-model footprint counts (§4.4) — everything that does not depend on
+    cache capacities, so the result is shareable across machines that differ
+    only in L2 size (hypothetical-GPU exploration).
+
+    ``block_store_bytes`` optionally injects a precomputed interior-block
+    store footprint (the implicit-set path is property-tested equal to the
+    enumeration oracle used by default).
+    """
     domain = domain or spec.domain
     ws = build_wave_sets(spec, launch, machine.n_sms,
                          max_threads_per_sm=machine.max_threads_per_sm)
@@ -104,9 +155,9 @@ def estimate_dram(spec: KernelSpec, launch: LaunchConfig, machine: GPUMachine,
     v_comp = sum(count_union(b) for b in f_wave.values()) * sect
 
     # --- warm-cache reuse via per-dimension layer sets (§4.4.2) ---------
-    saved_y = saved_z = 0.0
     v_ov_y = v_ov_z = 0.0
-    r_y = r_z = 0.0
+    alloc_y = alloc_z = 0
+    triple = 0
     f_y = footprint_boxes(spec.loads, ws.y_layer, sect) if ws.y_layer else {}
     f_z = footprint_boxes(spec.loads, ws.z_layer, sect) if ws.z_layer else {}
     if f_y:
@@ -114,40 +165,70 @@ def estimate_dram(spec: KernelSpec, launch: LaunchConfig, machine: GPUMachine,
             count_intersection_of_unions(f_wave[k], f_y[k]) for k in f_wave if k in f_y
         ) * sect
         alloc_y = footprint_bytes(spec.accesses, ws.y_layer, machine.line_bytes)
-        r_y = capacity.hit_rate("l2_over_y", alloc_y, machine.l2_bytes)
-        saved_y = r_y * v_ov_y
     if f_z:
         v_ov_z = sum(
             count_intersection_of_unions(f_wave[k], f_z[k]) for k in f_wave if k in f_z
         ) * sect
+        alloc_z = footprint_bytes(spec.accesses, ws.z_layer, machine.line_bytes)
         if f_y:
             # overlap of all three (wave ∩ z ∩ y) — subtract from z credit
-            triple = 0
             for k in f_wave:
-                if k in f_z and k in f_y:
-                    inter = []
-                    from .isets import box_intersect, box_is_empty
-
-                    for ba in f_wave[k]:
-                        for bb in f_z[k]:
-                            ib = box_intersect(ba, bb)
-                            if not box_is_empty(ib):
-                                inter.append(ib)
-                    triple += count_intersection_of_unions(inter, f_y[k])
-            v_ov_z = max(0.0, v_ov_z - triple * sect)
-        alloc_z = footprint_bytes(spec.accesses, ws.z_layer, machine.line_bytes)
-        r_z = capacity.hit_rate("l2_over_z", alloc_z, machine.l2_bytes)
-        saved_z = r_z * v_ov_z
+                if k not in f_z or k not in f_y:
+                    continue
+                wave_k, z_k, y_k = f_wave[k], f_z[k], f_y[k]
+                if not wave_k or not z_k or not y_k:
+                    continue
+                inter = []
+                for ba in wave_k:
+                    for bb in z_k:
+                        ib = box_intersect(ba, bb)
+                        if not box_is_empty(ib):
+                            inter.append(ib)
+                if inter:
+                    triple += count_intersection_of_unions(inter, y_k)
+        v_ov_z = max(0.0, v_ov_z - triple * sect)
 
     # --- stores ---------------------------------------------------------
     v_store_comp = footprint_bytes(spec.stores, ws.wave, sect)
     # per-block redundancy: sum of block store footprints vs wave unique
-    grid = ws.grid
-    bidx = _interior_block(grid)
-    blk_store = block_footprint_bytes(spec, launch, sect, "stores", domain, bidx)
-    v_store_up = blk_store * ws.n_blocks
+    if block_store_bytes is None:
+        bidx = _interior_block(ws.grid)
+        block_store_bytes = block_footprint_bytes(
+            spec, launch, sect, "stores", domain, bidx
+        )
     alloc_wave = footprint_bytes(spec.accesses, ws.wave, machine.line_bytes)
-    r_store = capacity.hit_rate("l2_store", alloc_wave, machine.l2_bytes)
+    return {
+        "wave_pts": wave_pts,
+        "n_blocks": ws.n_blocks,
+        "has_y": bool(f_y),
+        "has_z": bool(f_z),
+        "v_comp": v_comp,
+        "v_ov_y": v_ov_y,
+        "v_ov_z": v_ov_z,
+        "alloc_y": alloc_y,
+        "alloc_z": alloc_z,
+        "v_store_comp": v_store_comp,
+        "block_store_bytes": block_store_bytes,
+        "alloc_wave": alloc_wave,
+    }
+
+
+def dram_rates(struct: dict, machine: GPUMachine, capacity: CapacityModel) -> dict:
+    """Apply the capacity-miss model to the structural wave counts."""
+    wave_pts = struct["wave_pts"]
+    v_comp = struct["v_comp"]
+    saved_y = saved_z = 0.0
+    r_y = r_z = 0.0
+    v_ov_y, v_ov_z = struct["v_ov_y"], struct["v_ov_z"]
+    if struct["has_y"]:
+        r_y = capacity.hit_rate("l2_over_y", struct["alloc_y"], machine.l2_bytes)
+        saved_y = r_y * v_ov_y
+    if struct["has_z"]:
+        r_z = capacity.hit_rate("l2_over_z", struct["alloc_z"], machine.l2_bytes)
+        saved_z = r_z * v_ov_z
+    v_store_comp = struct["v_store_comp"]
+    v_store_up = struct["block_store_bytes"] * struct["n_blocks"]
+    r_store = capacity.hit_rate("l2_store", struct["alloc_wave"], machine.l2_bytes)
     v_store_red = max(0.0, v_store_up - v_store_comp)
     v_store_cap = (1.0 - r_store) * v_store_red
     # partially-written sectors evicted before completion are re-read (§4.4)
@@ -171,26 +252,27 @@ def estimate_dram(spec: KernelSpec, launch: LaunchConfig, machine: GPUMachine,
                 "r_z": r_z,
                 "r_store": r_store,
                 "store_comp_per_lup": v_store_comp / wave_pts,
-                "wave_blocks": ws.n_blocks,
+                "wave_blocks": struct["n_blocks"],
             },
         ),
         "wave_pts": wave_pts,
     }
 
 
-def estimate_gpu(
-    spec: KernelSpec,
-    launch: LaunchConfig,
-    machine: GPUMachine,
-    capacity: CapacityModel | None = None,
-    domain=None,
-) -> GPUEstimate:
-    """Full estimator pipeline (paper fig. 1): metrics -> multi-limiter model."""
-    capacity = capacity or CapacityModel()
-    domain = domain or spec.domain
-    l1 = estimate_l1(spec, launch, machine, capacity, domain)
-    dram = estimate_dram(spec, launch, machine, capacity, domain)
+def estimate_dram(spec: KernelSpec, launch: LaunchConfig, machine: GPUMachine,
+                  capacity: CapacityModel, domain=None) -> dict:
+    """DRAM<->L2 volumes via the wave model + layer-condition reuse (§4.4)."""
+    return dram_rates(dram_structure(spec, launch, machine, domain),
+                      machine, capacity)
 
+
+# --------------------------------------------------------------------------
+# Assembly
+# --------------------------------------------------------------------------
+def assemble_gpu_estimate(spec: KernelSpec, launch: LaunchConfig,
+                          machine: GPUMachine, domain: tuple,
+                          l1: dict, dram: dict) -> GPUEstimate:
+    """Combine staged L1/DRAM metrics into the multi-limiter prediction."""
     flops = spec.flops_per_point
     # limiter rates in LUP/s (paper §2: four limiters)
     rates = {
@@ -226,3 +308,18 @@ def estimate_gpu(
         limiter=limiter,
         limiter_rates=rates,
     )
+
+
+def estimate_gpu(
+    spec: KernelSpec,
+    launch: LaunchConfig,
+    machine: GPUMachine,
+    capacity: CapacityModel | None = None,
+    domain=None,
+) -> GPUEstimate:
+    """Full estimator pipeline (paper fig. 1): metrics -> multi-limiter model."""
+    capacity = capacity or CapacityModel()
+    domain = domain or spec.domain
+    l1 = estimate_l1(spec, launch, machine, capacity, domain)
+    dram = estimate_dram(spec, launch, machine, capacity, domain)
+    return assemble_gpu_estimate(spec, launch, machine, domain, l1, dram)

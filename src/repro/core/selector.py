@@ -5,6 +5,13 @@ shapes x thread-folding factors on GPU; block shapes on TPU), price every
 candidate with the analytical estimator, and return the ranking.  Evaluation
 is pure math — no code generation, no compilation, no benchmarking, no
 hardware — which is the paper's entire point.
+
+Ranking routes through the exploration engine (``repro.core.engine``): the
+staged, memoized pipeline produces bitwise-identical estimates to direct
+``estimate_gpu`` calls while sharing structural work across configurations.
+These wrappers keep the original list-returning API; the full
+``ExplorationReport`` (limiter attribution, skipped-config reasons) rides
+along on the result.
 """
 from __future__ import annotations
 
@@ -15,7 +22,7 @@ from typing import Callable, Iterable, Sequence
 from .access import KernelSpec, LaunchConfig
 from .capacity import CapacityModel
 from .machines import GPUMachine
-from .perfmodel import GPUEstimate, estimate_gpu
+from .perfmodel import GPUEstimate
 
 
 def paper_block_sizes(total_threads: int = 1024) -> list[tuple]:
@@ -59,6 +66,21 @@ def enumerate_gpu_configs(
     return cfgs
 
 
+class RankingResult(list):
+    """``list[RankedConfig]`` (best first) that also carries the engine's
+    exploration report: ``.skipped`` records every configuration that could
+    not be priced together with its exception reason (nothing is silently
+    swallowed), ``.report`` is the full ``ExplorationReport``."""
+
+    def __init__(self, ranked=(), report=None):
+        super().__init__(ranked)
+        self.report = report
+
+    @property
+    def skipped(self) -> list:
+        return self.report.skipped if self.report is not None else []
+
+
 def rank_gpu_configs(
     spec: KernelSpec,
     machine: GPUMachine,
@@ -66,21 +88,29 @@ def rank_gpu_configs(
     capacity: CapacityModel | None = None,
     total_threads: int = 1024,
     progress: Callable | None = None,
-) -> list[RankedConfig]:
-    """Rank configurations by predicted performance, best first."""
-    capacity = capacity or CapacityModel()
-    out = []
-    cfgs = list(configs) if configs is not None else enumerate_gpu_configs(total_threads)
-    for i, cfg in enumerate(cfgs):
-        try:
-            est = estimate_gpu(spec, cfg, machine, capacity)
-        except (ValueError, RuntimeError):
-            continue
-        out.append(RankedConfig(cfg, est))
-        if progress:
-            progress(i + 1, len(cfgs))
-    out.sort(key=lambda r: -r.perf)
-    return out
+    *,
+    strict: bool = False,
+    engine=None,
+    parallel: bool = False,
+) -> "RankingResult":
+    """Rank configurations by predicted performance, best first.
+
+    Runs on the exploration engine (results are bitwise-identical to serial
+    ``estimate_gpu`` calls).  ``strict=True`` re-raises the first estimation
+    error instead of recording the config under ``result.skipped``.  Pass an
+    ``engine`` (``repro.core.engine.Explorer``) to share its invariant cache
+    across calls, or ``parallel=True`` for a pooled one-off sweep.
+    """
+    from .engine import Explorer
+
+    explorer = engine or Explorer(parallel=parallel)
+    report = explorer.rank_gpu(
+        spec, machine, configs, capacity=capacity,
+        total_threads=total_threads, strict=strict, progress=progress,
+    )
+    return RankingResult(
+        (RankedConfig(r.config, r.estimate) for r in report.entries), report
+    )
 
 
 def select_gpu_config(

@@ -235,19 +235,26 @@ def select_pallas_config(
     candidates: Iterable[tuple],
     machine: TPUMachine = TPU_V5E,
     top_k: int | None = None,
+    engine=None,
 ) -> list[RankedPallasConfig]:
     """Rank (config_dict, PallasKernelSpec) candidates by predicted time.
 
-    Infeasible candidates (VMEM oversubscription — the violated layer
-    condition) are dropped; ties break toward smaller VMEM footprints.
+    Routes through the exploration engine (``repro.core.engine``), which
+    memoizes per-spec estimates across sweeps: infeasible candidates (VMEM
+    oversubscription — the violated layer condition) are recorded in the
+    engine report's ``skipped`` list with their reason; ties break toward
+    smaller VMEM footprints.  Pass an ``Explorer`` as ``engine`` to share
+    its cache across calls.
     """
-    ranked = []
-    for config, spec in candidates:
-        est = estimate_pallas(spec, machine)
-        if not est.feasible:
-            continue
-        ranked.append(RankedPallasConfig(config, spec, est))
-    ranked.sort(key=lambda r: (r.estimate.total_time, r.estimate.vmem_alloc_bytes))
+    from .engine import Explorer
+
+    candidates = list(candidates)
+    explorer = engine or Explorer()
+    report = explorer.rank_pallas(candidates, machine)
+    ranked = [
+        RankedPallasConfig(r.config, candidates[r.index][1], r.estimate)
+        for r in report.entries
+    ]
     return ranked[:top_k] if top_k else ranked
 
 

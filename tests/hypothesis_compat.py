@@ -1,0 +1,37 @@
+"""Import hypothesis when available; otherwise expose stand-ins so property
+tests skip individually while the rest of the module still runs.
+
+Usage in test modules:  ``from hypothesis_compat import given, settings, st``
+(pytest puts each test file's directory on sys.path).  Without hypothesis,
+``given`` marks the test skipped and ``st.<anything>(...)`` returns inert
+placeholders that only ever flow into skipped tests.
+"""
+try:
+    from hypothesis import given, settings, strategies as st  # noqa: F401
+
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    import pytest
+
+    HAVE_HYPOTHESIS = False
+
+    def given(*_args, **_kwargs):
+        def deco(fn):
+            return pytest.mark.skip(
+                reason="hypothesis not installed (dev extra)")(fn)
+
+        return deco
+
+    def settings(*_args, **_kwargs):
+        def deco(fn):
+            return fn
+
+        return deco
+
+    class _InertStrategies:
+        """st.* factories that produce placeholders for skipped tests."""
+
+        def __getattr__(self, _name):
+            return lambda *a, **k: None
+
+    st = _InertStrategies()

@@ -1,7 +1,7 @@
 """Property tests: implicit integer-set calculus vs brute-force enumeration."""
 import itertools
 
-from hypothesis import given, settings, strategies as st
+from hypothesis_compat import given, settings, st  # skips property tests without hypothesis
 
 from repro.core.isets import (
     AffineExpr1D,

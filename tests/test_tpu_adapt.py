@@ -1,7 +1,7 @@
 """TPU estimator tests: revisit analysis, feasibility, config selection."""
 import random
 
-from hypothesis import given, settings, strategies as st
+from hypothesis_compat import given, settings, st  # skips property tests without hypothesis
 
 from repro.core.machines import TPUMachine, TPU_V5E
 from repro.core.tpu_adapt import (

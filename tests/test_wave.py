@@ -1,5 +1,5 @@
 """Wave decomposition + layer-set construction tests."""
-from hypothesis import given, settings, strategies as st
+from hypothesis_compat import given, settings, st  # skips property tests without hypothesis
 
 from repro.core.access import LaunchConfig
 from repro.core.isets import box_points, count_union
