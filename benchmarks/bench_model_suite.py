@@ -1,0 +1,69 @@
+"""Workload suite: the whole model-config zoo lowered to kernel plans and
+priced across machines in ONE exploration-engine sweep (DESIGN.md §8).
+
+Every ``repro.configs`` architecture — dense, GQA, MoE (routing fan-out),
+RWKV/Mamba scan equivalents, encoder-decoder, VLM — is decomposed by
+``repro.suite`` into per-layer kernel workloads and priced on V100, A100,
+and TPU-v5e through a single ``Explorer.explore_plans`` call.  Layers that
+share shapes share structural tasks, so the invariant-cache hit rate is the
+headline number: pricing a 60-layer model costs a handful of distinct
+structural evaluations.
+
+Asserts the suite covers >= 8 models x >= 3 machines with every TPU cell
+complete, and that the structural memo absorbs > 50% of task lookups.
+"""
+from repro.core.machines import A100, TPU_V5E, V100
+from repro.suite import lower_all, price_plans
+
+from .common import bench_json, emit
+
+MACHINES = [V100, A100, TPU_V5E]
+SHAPE = "train_4k"
+
+
+def main():
+    plans = lower_all(SHAPE)
+    for name, plan in plans.items():
+        emit(
+            f"model_suite/lower/{name}", 0.0,
+            f"workloads={len(plan.workloads)};distinct={len(plan.distinct())};"
+            f"flops={plan.total_flops()/1e12:.2f}T",
+        )
+
+    suite = price_plans(plans, MACHINES)
+    for model in suite.models():
+        ranking = suite.machine_ranking(model)
+        for rank, (machine, t) in enumerate(ranking):
+            r = suite.get(model, machine)
+            lim = "|".join(f"{k}:{v}" for k, v in
+                           sorted(r.limiter_counts().items()))
+            emit(
+                f"model_suite/{model}/{machine}", 0.0,
+                f"rank={rank};t={t*1e3:.2f}ms;"
+                f"dominant={r.roofline.dominant};"
+                f"roofline={r.roofline_fraction:.2f};limiters={lim};"
+                f"missing={len(r.missing)}",
+            )
+    stats = suite.cache_stats
+    hit_rate = stats["hits"] / max(stats["hits"] + stats["misses"], 1)
+    emit(
+        "model_suite/sweep", suite.wall_time_s * 1e6,
+        f"models={len(plans)};machines={len(MACHINES)};"
+        f"cells={len(suite.reports)};cache_hits={stats['hits']};"
+        f"cache_misses={stats['misses']};hit_rate={hit_rate:.3f}",
+    )
+    bench_json("model_suite", suite.to_json())
+
+    # acceptance: >= 8 models priced on >= 3 machines in one sweep, with
+    # the structural memo carrying the repeated layers
+    assert len(plans) >= 8, f"only {len(plans)} models lowered"
+    for model in plans:
+        priced = [m for m, _ in suite.machine_ranking(model)]
+        assert len(priced) >= 3, f"{model} priced on {priced} only"
+        tpu = suite.get(model, TPU_V5E.name)
+        assert tpu.complete, f"{model} TPU cell missing {tpu.missing}"
+    assert hit_rate > 0.5, f"structural memo hit rate {hit_rate:.3f} <= 0.5"
+
+
+if __name__ == "__main__":
+    main()

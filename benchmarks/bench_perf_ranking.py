@@ -24,7 +24,7 @@ from repro.core.perfmodel import estimate_gpu
 from repro.core.selector import enumerate_gpu_configs, ranking_quality
 from repro.core.specs import lbm_d3q15, star_stencil_3d
 
-from .common import SMALL_A100, configs_512, emit, timed
+from .common import SMALL_A100, bench_json, configs_512, emit, timed
 
 
 def phenomenological_perf(spec, lc, machine):
@@ -102,6 +102,14 @@ def engine_speedup():
     )
     assert identical, "engine ranking must be bitwise-identical to serial"
     assert speedup >= 3.0, f"engine speedup {speedup:.2f}x < 3x"
+    return {
+        "n_configs": len(configs),
+        "serial_s": t_serial,
+        "engine_s": t_engine,
+        "speedup": speedup,
+        "identical_ranking": identical,
+        "cache_hits": report.cache_stats["hits"],
+    }
 
 
 def main():
@@ -109,7 +117,10 @@ def main():
     q2 = run_app("lbm", lbm_d3q15(domain=(24, 48, 64)), configs_512()[:8])
     # paper finds 96% efficiency for the stencil; we require the same class
     assert q1["efficiency"] > 0.85, q1
-    engine_speedup()
+    engine = engine_speedup()
+    bench_json("perf_ranking", {
+        "stencil3d25": q1, "lbm": q2, "engine_paper_grid_a100": engine,
+    })
 
 
 if __name__ == "__main__":

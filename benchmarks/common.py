@@ -7,6 +7,8 @@ oracle tractable on this single-core container.
 """
 from __future__ import annotations
 
+import json
+import os
 import time
 
 from repro.core.access import LaunchConfig
@@ -44,6 +46,25 @@ def timed(fn, *args, **kw):
 
 def emit(name: str, us: float, derived: str):
     print(f"{name},{us:.1f},{derived}")
+
+
+def bench_json(name: str, payload: dict) -> str | None:
+    """Persist a benchmark's structured output as ``BENCH_<name>.json``.
+
+    Writes into ``$BENCH_JSON_DIR`` (CI uploads that directory as the
+    ``bench-artifacts`` build artifact, capturing the perf trajectory per
+    PR).  No-op when the variable is unset, so local runs stay side-effect
+    free.
+    """
+    out_dir = os.environ.get("BENCH_JSON_DIR")
+    if not out_dir:
+        return None
+    os.makedirs(out_dir, exist_ok=True)
+    path = os.path.join(out_dir, f"BENCH_{name}.json")
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=2, sort_keys=True, default=str)
+    print(f"# wrote {path}")
+    return path
 
 
 def rel_err(pred, meas):

@@ -19,6 +19,7 @@ MODULES = [
     "bench_perf_ranking",     # figs 24/25 / §5.8
     "bench_kernel_select",    # fig 1 workflow on TPU
     "bench_machine_compare",  # §1.1 cross-machine/hypothetical-GPU exploration
+    "bench_model_suite",      # DESIGN §8 model zoo -> kernel plans, one sweep
     "bench_roofline",         # §Roofline table (reads experiments/dryrun)
 ]
 

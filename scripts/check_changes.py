@@ -36,6 +36,14 @@ def resolve_base() -> str | None:
 
 
 def main() -> int:
+    event = os.environ.get("GITHUB_EVENT_NAME")
+    if event and event != "pull_request":
+        # direct pushes (e.g. a merge commit landing on main) carry no PR
+        # diff context; merge-base against the just-updated default branch
+        # would be HEAD itself, so there is nothing meaningful to check
+        print(f"check_changes: {event!r} event has no PR diff context "
+              "— skipping")
+        return 0
     base = resolve_base()
     if base is None:
         print("check_changes: no diff base found (push to default branch?) "

@@ -19,6 +19,7 @@ The cache persists across calls, so a multi-machine or multi-kernel sweep
 """
 from __future__ import annotations
 
+import dataclasses
 import time
 from dataclasses import dataclass
 from typing import Iterable, Sequence
@@ -136,6 +137,24 @@ class Explorer:
             report.skipped.append(
                 SkippedConfig(w.name, m.name, None, reason))
         return report
+
+    def explore_plans(self, plans, machines, *,
+                      strict: bool | None = None) -> ExplorationReport:
+        """Price a batch of named workload plans in ONE sweep.
+
+        ``plans``: mapping plan name -> iterable of ``Workload``.  Workload
+        names are namespaced as ``"<plan>::<workload>"`` in the report, so
+        many plans (e.g. the model suite's per-model kernel plans) share a
+        single enumerate/dedupe/evaluate pass — and therefore the invariant
+        cache — without name collisions.  Filter per plan with
+        ``report.ranking(f"{plan}::{workload}", machine)``.
+        """
+        namespaced = [
+            dataclasses.replace(w, name=f"{pname}::{w.name}")
+            for pname, wls in plans.items()
+            for w in wls
+        ]
+        return self.explore(namespaced, machines, strict=strict)
 
     # ---- the staged core ----------------------------------------------
     def _sweep(self, cells, *, strict: bool | None = None,

@@ -80,6 +80,12 @@ class RankingResult(list):
     def skipped(self) -> list:
         return self.report.skipped if self.report is not None else []
 
+    @property
+    def cache_stats(self) -> dict:
+        """Invariant-cache hits/misses/entries of the engine sweep that
+        produced this ranking (per-sweep deltas, see DESIGN.md §5)."""
+        return self.report.cache_stats if self.report is not None else {}
+
 
 def rank_gpu_configs(
     spec: KernelSpec,

@@ -99,6 +99,34 @@ def lbm_d3q15(domain=(256, 256, 256), elem_bytes: int = 8) -> KernelSpec:
     return KernelSpec("lbm_d3q15", domain, tuple(accs), flops_per_point=180.0)
 
 
+def matmul_naive(M: int, K: int, N: int, elem_bytes: int = 2,
+                 name: str | None = None) -> KernelSpec:
+    """C[m,n] += A[m,k] * B[k,n] as address expressions (blocked linear
+    algebra on the paper's model).
+
+    The iteration domain is one point per multiply-accumulate, in (z,y,x) =
+    (k, m, n) order: a thread block covers an (bm x bn) output tile and a bk
+    slice of the reduction, so block/folding shapes trade A-row reuse
+    (along x), B-column reuse (along y), and C-tile residency (along z) —
+    the same locality space a tiled CUDA-core GEMM explores.  The store's
+    address ignores the k dimension (coeff via dim_map), exactly like the
+    LBM spec's per-PDF dimension folding.  Work unit: 1 MAC = 2 flops;
+    ``perf_lups`` is MAC/s.
+    """
+    a = Field("A", (M, K), elem_bytes)
+    b = Field("B", (K, N), elem_bytes)
+    c = Field("C", (M, N), elem_bytes)
+    accs = (
+        Access(a, (0, 0), dim_map=(1, 0)),            # A[m, k]
+        Access(b, (0, 0), dim_map=(0, 2)),            # B[k, n]
+        Access(c, (0, 0), dim_map=(1, 2), is_store=True),  # C[m, n]
+    )
+    return KernelSpec(
+        name or f"gemm_{M}x{K}x{N}", (K, M, N), accs,
+        flops_per_point=2.0, work_unit="MAC",
+    )
+
+
 def streaming_load(n: int, elem_bytes: int = 8) -> KernelSpec:
     """c = A[i]  (paper fig. 2 LOAD kernel)."""
     a = Field("A", (n,), elem_bytes)

@@ -1,3 +1,53 @@
-# OPTIONAL layer. Add <name>.py (or .cu) + ops.py + ref.py ONLY
-# for compute hot-spots the paper itself optimizes with a custom
-# kernel. Leave this package empty if the paper has none.
+"""Kernel packages + the generator entry-point registry.
+
+Every kernel package couples a code generator to the estimator through one
+uniform entry point: ``<package>.generator.candidate_specs(...)`` yields
+``(config_dict, PallasKernelSpec)`` pairs — the decision space priced before
+any code exists (paper fig. 1).  ``get_generator`` resolves that entry point
+lazily by name, so consumers (the workload suite, benchmarks) discover
+generators without importing every kernel package (and its jax dependency)
+up front.
+"""
+from __future__ import annotations
+
+import importlib
+from typing import Callable
+
+# name -> module holding candidate_specs; extend when adding a kernel package
+GENERATOR_MODULES = {
+    "flash_attention": "repro.kernels.flash_attention.generator",
+    "lbm_d3q15": "repro.kernels.lbm_d3q15.generator",
+    "matmul": "repro.kernels.matmul.generator",
+    "stencil3d25": "repro.kernels.stencil3d25.generator",
+}
+
+
+def available_generators() -> list[str]:
+    return sorted(GENERATOR_MODULES)
+
+
+def get_generator(name: str) -> Callable:
+    """Resolve ``candidate_specs`` of the named kernel generator."""
+    if name not in GENERATOR_MODULES:
+        raise KeyError(
+            f"unknown kernel generator {name!r}; "
+            f"choose from {available_generators()}"
+        )
+    mod = importlib.import_module(GENERATOR_MODULES[name])
+    return mod.candidate_specs
+
+
+def lazy_submodules(pkg_name: str, submodules: tuple) -> tuple:
+    """PEP-562 ``(__getattr__, __dir__)`` pair for a kernel package: the
+    jax-backed submodules load on first attribute access only."""
+
+    def __getattr__(name):
+        if name in submodules:
+            return importlib.import_module(f"{pkg_name}.{name}")
+        raise AttributeError(
+            f"module {pkg_name!r} has no attribute {name!r}")
+
+    def __dir__():
+        return sorted(submodules)
+
+    return __getattr__, __dir__

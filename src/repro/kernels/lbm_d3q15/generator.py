@@ -4,8 +4,6 @@ from __future__ import annotations
 from repro.core.machines import TPUMachine, TPU_V5E
 from repro.core.tpu_adapt import OperandSpec, PallasKernelSpec, select_pallas_config
 
-from .kernel import make_kernel
-
 FLOPS_PER_LUP = 15 * 8 + 25  # relax+equilibrium per PDF + gradient/normal math
 
 
@@ -71,6 +69,8 @@ def rank_configs(domain: tuple, machine: TPUMachine = TPU_V5E, elem_bytes: int =
 
 
 def generate(domain: tuple, machine: TPUMachine = TPU_V5E, elem_bytes: int = 4, **kw):
+    from .kernel import make_kernel
+
     ranked = rank_configs(domain, machine, elem_bytes)
     if not ranked:
         raise RuntimeError("no feasible LBM configuration")

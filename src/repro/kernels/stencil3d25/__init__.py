@@ -1,1 +1,5 @@
-from . import generator, kernel, ops, ref  # noqa: F401
+"""Generator + kernel package; submodules load lazily so the generator's
+analytical decision space can be priced without importing jax."""
+from repro.kernels import lazy_submodules
+
+__getattr__, __dir__ = lazy_submodules(__name__, ("generator", "kernel", "ops", "ref"))

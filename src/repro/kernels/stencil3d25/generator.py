@@ -19,8 +19,6 @@ from repro.core.tpu_adapt import (
     select_pallas_config,
 )
 
-from .kernel import make_kernel
-
 
 def _flops_per_point(r: int) -> float:
     return float(6 * r + 1) * 2.0  # mul + add per tap
@@ -112,6 +110,8 @@ def generate(
 ):
     """Pick the best configuration analytically and build that kernel."""
     import jax.numpy as jnp
+
+    from .kernel import make_kernel
 
     ranked = rank_configs(r, domain, machine, elem_bytes)
     if not ranked:

@@ -19,9 +19,9 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 
+from repro.layers.shapes import MAMBA_CHUNK, RWKV_CHUNK  # noqa: F401 - shared constants
+
 LOG_DECAY_FLOOR = -0.35
-RWKV_CHUNK = 32
-MAMBA_CHUNK = 64
 
 # calibration hooks (see layers/attention.py)
 CHUNK_OVERRIDE = [None]

@@ -1,0 +1,41 @@
+"""Workload suite: model configs lowered into estimator-priced kernel plans.
+
+The paper's closing claim — the estimator integrates with *any* code
+generator that can produce address expressions — applied to the model-config
+zoo: ``lower_model`` decomposes a ``repro.configs`` architecture into a
+``ModelPlan`` of kernel workloads (attention cores, projection/MoE/SSM
+GEMMs), and ``price_plans`` prices whole batches of plans across GPU and TPU
+machines in one exploration-engine sweep.  See DESIGN.md §8 for the lowering
+contract.
+
+    from repro.configs import get_config
+    from repro.suite import lower_model, price_plans
+    from repro.core.machines import A100, TPU_V5E, V100
+
+    plan = lower_model(get_config("mixtral-8x7b"), "train_4k")
+    suite = price_plans({"mixtral-8x7b": plan}, [V100, A100, TPU_V5E])
+    print(suite.table())
+"""
+from .lowering import (
+    SUITE_GPU_BLOCKS,
+    KernelWorkload,
+    ModelPlan,
+    lower_all,
+    lower_model,
+    pad_tile,
+    suite_gpu_configs,
+)
+from .report import (
+    ModelReport,
+    SuiteReport,
+    WorkloadPricing,
+    machine_kind,
+    price_plans,
+)
+
+__all__ = [
+    "KernelWorkload", "ModelPlan", "lower_model", "lower_all",
+    "pad_tile", "suite_gpu_configs", "SUITE_GPU_BLOCKS",
+    "ModelReport", "SuiteReport", "WorkloadPricing",
+    "machine_kind", "price_plans",
+]
