@@ -69,3 +69,19 @@ def bench_json(name: str, payload: dict) -> str | None:
 
 def rel_err(pred, meas):
     return abs(pred - meas) / max(abs(meas), 1e-12)
+
+
+def invariant_cache_path(name: str) -> str | None:
+    """Location for a persistent engine invariant cache, or None.
+
+    Controlled by ``$REPRO_CACHE_DIR`` (CI points it at a restored
+    actions/cache directory, so warm bench runs skip essentially all
+    structural work; version-mismatched or corrupted files are ignored by
+    the loader).  Unset means cold runs — local benchmarking stays
+    side-effect free by default.
+    """
+    cache_dir = os.environ.get("REPRO_CACHE_DIR")
+    if not cache_dir:
+        return None
+    os.makedirs(cache_dir, exist_ok=True)
+    return os.path.join(cache_dir, f"{name}.invcache")

@@ -1,0 +1,164 @@
+#!/usr/bin/env python
+"""Perf-trajectory gate: compare bench JSON against committed baselines.
+
+CI runs the engine benchmarks with ``BENCH_JSON_DIR`` set, then calls
+
+    python scripts/check_bench.py --baseline benchmarks/baselines \
+                                  --current bench-artifacts
+
+Two failure classes:
+
+  * **ranking divergence** — any ranking-bearing field (engine best config,
+    pruned top-10, per-model machine ranking, ranking-quality scores) that
+    differs from the baseline.  These are pure deterministic math; a change
+    means the estimator's answers changed and the baseline must be
+    regenerated deliberately (re-run the bench with
+    ``BENCH_JSON_DIR=benchmarks/baselines`` and commit the diff).
+  * **wall-time regression** — a gated timing ratio more than 25% worse
+    than baseline.  Gates are *intra-run ratios* (engine vs serial path,
+    pruned vs exhaustive, warm vs cold), so they transfer across runner
+    hardware; absolute seconds are recorded in the JSON but not gated.
+    ``BENCH_GATE_SLACK`` (default 1.0) multiplies the allowed regression
+    for exceptionally noisy environments.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import math
+import os
+import sys
+
+REGRESSION = 1.25  # ">25% worse than baseline" fails
+
+
+def load(dirname: str, name: str) -> dict | None:
+    path = os.path.join(dirname, f"BENCH_{name}.json")
+    if not os.path.exists(path):
+        return None
+    with open(path) as f:
+        return json.load(f)
+
+
+class Gate:
+    def __init__(self):
+        self.failures: list = []
+        self.checks = 0
+
+    def equal(self, what: str, base, cur, tol: float = 0.0):
+        self.checks += 1
+        ok = (
+            abs(base - cur) <= tol * max(abs(base), 1.0)
+            if isinstance(base, float) and isinstance(cur, float)
+            else base == cur
+        )
+        if not ok:
+            self.failures.append(
+                f"RANKING DIVERGED: {what}: baseline={base!r} current={cur!r}")
+
+    def ratio(self, what: str, base: float, cur: float, slack: float,
+              higher_is_better: bool):
+        """Gate an intra-run ratio at 25% regression (scaled by slack)."""
+        self.checks += 1
+        if not (math.isfinite(base) and math.isfinite(cur)) or base <= 0:
+            self.failures.append(f"BAD GATE VALUE: {what}: {base} -> {cur}")
+            return
+        allowed = REGRESSION * slack
+        worse = (cur < base / allowed) if higher_is_better \
+            else (cur > base * allowed)
+        if worse:
+            self.failures.append(
+                f"WALL-TIME REGRESSION: {what}: baseline={base:.3f} "
+                f"current={cur:.3f} (>{(allowed - 1) * 100:.0f}% worse)")
+
+
+def check_perf_ranking(gate: Gate, base: dict, cur: dict, slack: float):
+    e_base, e_cur = base["engine_paper_grid_a100"], cur["engine_paper_grid_a100"]
+    gate.equal("perf_ranking: engine ranking identical to serial",
+               True, bool(e_cur["identical_ranking"]))
+    gate.equal("perf_ranking: config count", e_base["n_configs"],
+               e_cur["n_configs"])
+    for app in ("stencil3d25", "lbm"):
+        for metric in ("efficiency", "spearman"):
+            gate.equal(f"perf_ranking: {app}.{metric}",
+                       float(base[app][metric]), float(cur[app][metric]),
+                       tol=1e-9)
+    # engine speedup over the seed serial path: intra-run, hardware-portable
+    gate.ratio("perf_ranking: engine speedup vs serial path",
+               float(e_base["speedup"]), float(e_cur["speedup"]), slack,
+               higher_is_better=True)
+
+
+def check_pruned_search(gate: Gate, base: dict, cur: dict, slack: float):
+    g_base, g_cur = base["paper_grid_a100"], cur["paper_grid_a100"]
+    gate.equal("pruned_search: top-10 identical to exhaustive",
+               True, bool(g_cur["identical_topk"]))
+    gate.equal("pruned_search: top-10 configs", g_base["top10"],
+               g_cur["top10"])
+    gate.equal("pruned_search: structural task ratio <= 0.5",
+               True, float(g_cur["task_ratio"]) <= 0.5)
+    gate.ratio("pruned_search: paper-grid pruned/exhaustive wall ratio",
+               float(g_base["pruned_s"]) / float(g_base["exhaustive_s"]),
+               float(g_cur["pruned_s"]) / float(g_cur["exhaustive_s"]),
+               slack, higher_is_better=False)
+    s_base, s_cur = base["model_suite"], cur["model_suite"]
+    gate.equal("pruned_search: suite winners identical",
+               True, bool(s_cur["ranking_equal"]))
+    gate.equal("pruned_search: suite machine ranking", s_base["ranking"],
+               s_cur["ranking"])
+    gate.ratio("pruned_search: suite warm speedup",
+               float(s_base["warm_speedup"]), float(s_cur["warm_speedup"]),
+               slack, higher_is_better=True)
+
+
+def check_model_suite(gate: Gate, base: dict, cur: dict, slack: float):
+    gate.equal("model_suite: per-model machine ranking",
+               {m: [r[0] for r in v] for m, v in base["ranking"].items()},
+               {m: [r[0] for r in v] for m, v in cur["ranking"].items()})
+
+
+CHECKS = {
+    "perf_ranking": check_perf_ranking,
+    "pruned_search": check_pruned_search,
+    "model_suite": check_model_suite,
+}
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--baseline", default="benchmarks/baselines")
+    ap.add_argument("--current", required=True)
+    args = ap.parse_args()
+    slack = float(os.environ.get("BENCH_GATE_SLACK", "1.0"))
+
+    gate = Gate()
+    compared = 0
+    for name, fn in CHECKS.items():
+        base = load(args.baseline, name)
+        cur = load(args.current, name)
+        if base is None:
+            print(f"# no baseline for {name} — skipped")
+            continue
+        if cur is None:
+            gate.failures.append(
+                f"MISSING: current run produced no BENCH_{name}.json")
+            continue
+        fn(gate, base, cur, slack)
+        compared += 1
+        print(f"# checked {name}")
+
+    if compared == 0:
+        print("FAIL: no benchmark pairs compared")
+        return 1
+    for f in gate.failures:
+        print(f"FAIL: {f}")
+    if gate.failures:
+        print(f"{len(gate.failures)} of {gate.checks} gates failed "
+              f"(regenerate baselines deliberately if rankings changed)")
+        return 1
+    print(f"OK: {gate.checks} gates passed against {args.baseline}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

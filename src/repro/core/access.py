@@ -19,6 +19,36 @@ from typing import Sequence
 from .isets import AffineExpr1D, APRange, Box, box_points, map_box
 
 
+def memoize_hash(cls):
+    """Cache a frozen dataclass's hash on the instance.
+
+    Engine cache keys embed whole ``KernelSpec`` trees; Python recomputes a
+    dataclass hash from scratch on *every* dict probe, which made key
+    hashing the dominant cost of warm exploration sweeps.  The memo is
+    stripped from the pickled state — ``hash()`` is process-seeded
+    (PYTHONHASHSEED), so a persisted memo would poison dict lookups in the
+    next process.
+    """
+    base_hash = cls.__hash__
+
+    def __hash__(self):
+        h = self.__dict__.get("_hashcache")
+        if h is None:
+            h = base_hash(self)
+            object.__setattr__(self, "_hashcache", h)
+        return h
+
+    def __getstate__(self):
+        state = dict(self.__dict__)
+        state.pop("_hashcache", None)
+        return state
+
+    cls.__hash__ = __hash__
+    cls.__getstate__ = __getstate__
+    return cls
+
+
+@memoize_hash
 @dataclass(frozen=True)
 class Field:
     """A multi-dimensional array operand.
@@ -38,6 +68,7 @@ class Field:
         return len(self.shape)
 
 
+@memoize_hash
 @dataclass(frozen=True)
 class Access:
     """One load/store: domain coordinate -> element coordinate per dim.
@@ -122,6 +153,7 @@ class Access:
         return (self.field.name,) + head + (x,)
 
 
+@memoize_hash
 @dataclass(frozen=True)
 class KernelSpec:
     """Everything the estimator needs about a kernel (paper fig. 1 inputs)."""
@@ -144,6 +176,7 @@ class KernelSpec:
         return replace(self, domain=tuple(new_domain))
 
 
+@memoize_hash
 @dataclass(frozen=True)
 class LaunchConfig:
     """GPU launch configuration: thread block shape + thread folding.

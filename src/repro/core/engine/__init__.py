@@ -1,4 +1,4 @@
-"""Unified exploration engine: staged, memoized, parallel config-space search.
+"""Unified exploration engine: staged, memoized, parallel, pruned search.
 
 The paper's workflow (fig. 1) prices one configuration; this subsystem prices
 *spaces* — the full eq.-6 grid, multiple kernels, multiple (including
@@ -12,17 +12,21 @@ hypothetical) machines — through a single ``Explorer`` API:
     )
     print(report.comparison_table())
 
-See DESIGN.md §5 for the architecture and the ``Estimator`` protocol
-contract backends implement.
+``top_k=...`` turns any sweep into a tiered bound-then-refine search (same
+top-k results, a fraction of the structural work); ``cache_path=...`` makes
+the invariant cache persistent, so warm re-runs skip structural work
+entirely.  See DESIGN.md §5 for the architecture and the ``Estimator``
+protocol contract backends implement.
 """
 from .backends import GPUBackend, PallasBackend
 from .explorer import Explorer, Workload
-from .invariants import InvariantCache
-from .pool import run_tasks
+from .invariants import ENGINE_CACHE_VERSION, InvariantCache
+from .pool import TaskPool, default_workers, run_tasks
 from .protocol import (
     Estimator,
     EvalResult,
     ExplorationReport,
+    PrunedConfig,
     SkipConfig,
     SkippedConfig,
     Task,
@@ -31,7 +35,8 @@ from .protocol import (
 __all__ = [
     "Explorer", "Workload",
     "GPUBackend", "PallasBackend",
-    "InvariantCache", "run_tasks",
+    "InvariantCache", "ENGINE_CACHE_VERSION",
+    "TaskPool", "run_tasks", "default_workers",
     "Estimator", "EvalResult", "ExplorationReport",
-    "SkipConfig", "SkippedConfig", "Task",
+    "SkipConfig", "SkippedConfig", "PrunedConfig", "Task",
 ]

@@ -1,25 +1,44 @@
 """Estimator-protocol backends over the GPU and TPU analytical models.
 
-GPU configurations are priced in three structural pieces with distinct
+GPU configurations are priced in four structural pieces with distinct
 sharing behaviour:
 
-  * ``block``  — interior-block footprints, keyed by the *block extent*
+  * ``block``   — interior-block footprints, keyed by the *block extent*
     (machine-independent; different (block, folding) pairs fold to the same
     extent).  Computed on the implicit-set path, which the tier-1 property
-    tests pin as exactly equal to the enumeration oracle.
-  * ``walk``   — L1 grid walk + per-warp sector requests, keyed by the full
+    tests pin as exactly equal to the enumeration oracle.  Cheap (a handful
+    of box unions) — it doubles as the closed-form bound stage of the
+    tiered search.
+  * ``wave-front`` — wave/layer footprint *volumes* (§4.4 unions): the
+    compulsory load/store volumes and the layer-set footprints and
+    allocation volumes.  Keyed by extent + machine *geometry* (SM count,
+    sector/line size) but not cache sizes, so hypothetical-GPU sweeps
+    (e.g. doubled L2) share every count.
+  * ``wave-overlap`` — the wave ∩ layer intersection counts (the dominant
+    wave-model cost), same key shape as the front.
+  * ``walk``    — L1 grid walk + per-warp sector requests, keyed by the full
     (block, folding) launch (machine-independent: shared across machines).
-  * ``wave``   — wave-model footprint counts, keyed by extent + machine
-    *geometry* (SM count, sector/line size) but not cache sizes, so
-    hypothetical-GPU sweeps (e.g. doubled L2) share every count.
 
 ``combine`` then applies capacity hit-rates and limiter arithmetic — the
 exact float operations of ``estimate_gpu``, so engine results are bitwise
 identical to the direct path.
 
+The tiered bound-then-refine contract (DESIGN.md §5): the bound stage
+resolves only the ``block`` task and bounds predicted time below by FP work
+and compulsory L2 volume; surviving configurations refine tier by tier
+(front → overlap → walk), with ``tier_bound`` tightening at each step —
+after the front a sound DRAM bound (realized layer reuse can never exceed
+``min(v_comp, r_y*v_y + r_z*v_z)``, the overlaps being disjoint subsets of
+the wave footprint), after the overlap the exact DRAM time.  Every bound is
+a mathematical lower bound on the model's predicted time; a relative safety
+margin of 1e-9 absorbs float-rounding differences between the closed forms
+and the model's own arithmetic, so branch-and-bound pruning is exact.
+
 The Pallas backend wraps ``estimate_pallas`` (already cheap closed-form
 math): one task per (kernel spec, machine), with VMEM feasibility turned
-into a recorded skip reason.
+into a recorded skip reason.  Its bound is the HBM-traffic time floor from
+BlockSpec byte counts (``tpu_adapt.pallas_time_floor``), which shares the
+estimate's float ops and is therefore sound without any margin.
 """
 from __future__ import annotations
 
@@ -32,11 +51,18 @@ from ..perfmodel import (
     L1Parts,
     _interior_block,
     assemble_gpu_estimate,
+    dram_front_structure,
+    dram_overlap_structure,
     dram_rates,
-    dram_structure,
     l1_rates,
 )
 from .protocol import EvalResult, SkipConfig, Task
+
+# Relative slack applied to the GPU closed-form bounds: the model computes
+# times as 1/(bw / volume) while the bounds compute volume/bw directly, which
+# can differ by an ulp (~1e-16 relative).  1e-9 is vastly wider than any
+# accumulated rounding and vastly tighter than any real pruning margin.
+_BOUND_MARGIN = 1.0 - 1e-9
 
 
 # --------------------------------------------------------------------------
@@ -67,15 +93,22 @@ def gpu_walk_task(spec: KernelSpec, launch: LaunchConfig, domain: tuple) -> tupl
     )
 
 
-def gpu_wave_task(spec: KernelSpec, launch: LaunchConfig, machine: GPUMachine,
-                  domain: tuple) -> dict:
-    """Wave-model structural counts; the interior-block store footprint is
-    fed from the implicit-set path (== oracle) instead of re-enumerating."""
+def gpu_wave_front_task(spec: KernelSpec, launch: LaunchConfig,
+                        machine: GPUMachine, domain: tuple) -> dict:
+    """Wave-model footprint volumes (unions only); the interior-block store
+    footprint is fed from the implicit-set path (== oracle) instead of
+    re-enumerating."""
     store_bytes = footprint_bytes(
         spec.stores, _interior_boxes(spec, launch, domain), machine.sector_bytes
     )
-    return dram_structure(spec, launch, machine, domain,
-                          block_store_bytes=store_bytes)
+    return dram_front_structure(spec, launch, machine, domain,
+                                block_store_bytes=store_bytes)
+
+
+def gpu_wave_overlap_task(spec: KernelSpec, launch: LaunchConfig,
+                          machine: GPUMachine, domain: tuple) -> dict:
+    """Wave ∩ layer overlap counts — the expensive wave-model intersections."""
+    return dram_overlap_structure(spec, launch, machine, domain)
 
 
 class GPUBackend:
@@ -90,36 +123,104 @@ class GPUBackend:
         self.domain = domain or spec.domain
 
     def _keys(self, launch: LaunchConfig, machine: GPUMachine) -> tuple:
-        """Structural keys (block, walk, wave) — single source of truth for
-        both task emission and combine lookup."""
+        """Structural keys (block, front, overlap, walk) — single source of
+        truth for task emission, combine lookup, and tier bounds."""
         spec, domain = self.spec, self.domain
         extent = launch.block_extent()
         geom = (machine.n_sms, machine.max_threads_per_sm,
                 machine.sector_bytes, machine.line_bytes)
         return (
             ("gpu-block", spec, extent, domain),
+            ("gpu-wave-front", spec, extent, launch.threads, geom, domain),
+            ("gpu-wave-overlap", spec, extent, launch.threads, geom, domain),
             ("gpu-walk", spec, launch.block, launch.folding, domain),
-            ("gpu-wave", spec, extent, launch.threads, geom, domain),
         )
 
-    # items are LaunchConfigs
+    # items are LaunchConfigs; task order == tier resolution order, so the
+    # first failing task yields the same skip reason on both search paths
     def structural_tasks(self, launch: LaunchConfig,
                          machine: GPUMachine) -> list:
         spec, domain = self.spec, self.domain
-        k_block, k_walk, k_wave = self._keys(launch, machine)
+        k_block, k_front, k_overlap, k_walk = self._keys(launch, machine)
         return [
             Task(k_block, gpu_block_task, (spec, launch, domain)),
+            Task(k_front, gpu_wave_front_task, (spec, launch, machine, domain)),
+            Task(k_overlap, gpu_wave_overlap_task,
+                 (spec, launch, machine, domain)),
             Task(k_walk, gpu_walk_task, (spec, launch, domain)),
-            Task(k_wave, gpu_wave_task, (spec, launch, machine, domain)),
         ]
+
+    # ---- tiered bound-then-refine (optional protocol methods) ----------
+    def bound_tasks(self, launch: LaunchConfig, machine: GPUMachine) -> list:
+        """The closed-form bound needs only the (cheap) block footprints."""
+        spec, domain = self.spec, self.domain
+        k_block = ("gpu-block", spec, launch.block_extent(), domain)
+        return [Task(k_block, gpu_block_task, (spec, launch, domain))]
+
+    def tiers(self, launch: LaunchConfig, machine: GPUMachine) -> list:
+        """Cheapest discriminating signal first: wave front (sound DRAM
+        bound) → wave overlaps (exact DRAM) → grid walk (exact L1/L2)."""
+        spec, domain = self.spec, self.domain
+        _, k_front, k_overlap, k_walk = self._keys(launch, machine)
+        return [
+            [Task(k_front, gpu_wave_front_task,
+                  (spec, launch, machine, domain))],
+            [Task(k_overlap, gpu_wave_overlap_task,
+                  (spec, launch, machine, domain))],
+            [Task(k_walk, gpu_walk_task, (spec, launch, domain))],
+        ]
+
+    def tier_bound(self, launch: LaunchConfig, machine: GPUMachine,
+                   values: dict) -> float:
+        spec = self.spec
+        k_block, k_front, k_overlap, _ = self._keys(launch, machine)
+        pts = launch.points_per_block()
+        # FP work floor (config-independent)
+        t = max(spec.flops_per_point, 1e-12) / machine.peak_flops_dp
+        if k_block in values:
+            # L2 floor: compulsory load sectors + write-through stores; the
+            # capacity term of the L1 model only ever adds volume
+            v_comp_b, _, v_store_b = values[k_block]
+            t = max(t, (v_comp_b + v_store_b) / pts / machine.l2_bw)
+        front = values.get(k_front)
+        if front is not None:
+            if k_overlap in values:
+                # exact DRAM time: identical float ops to the model's rate
+                struct = dict(front)
+                struct.update(values[k_overlap])
+                dram = dram_rates(struct, machine, self.capacity)
+                vol = dram["load_per_lup"] + dram["store_per_lup"]
+                t = max(t, 1.0 / (machine.dram_bw / max(vol, 1e-12)))
+            else:
+                # sound DRAM floor: realized reuse <= min(v_comp,
+                # r_y*v_y + r_z*v_z) because the per-dimension overlaps are
+                # disjoint subsets of the wave footprint and hit rates are
+                # clamped to [0, 1]
+                saved_cap = 0.0
+                if front["has_y"]:
+                    saved_cap += self.capacity.hit_rate(
+                        "l2_over_y", front["alloc_y"], machine.l2_bytes
+                    ) * front["v_y"]
+                if front["has_z"]:
+                    saved_cap += self.capacity.hit_rate(
+                        "l2_over_z", front["alloc_z"], machine.l2_bytes
+                    ) * front["v_z"]
+                saved_cap = min(saved_cap, front["v_comp"])
+                v_lb = front["v_comp"] - saved_cap + front["v_store_comp"]
+                t = max(t, v_lb / front["wave_pts"] / machine.dram_bw)
+        return t * _BOUND_MARGIN
+
+    def primary_time(self, result: EvalResult) -> float:
+        return result.estimate.time_per_lup
 
     def combine(self, launch: LaunchConfig, machine: GPUMachine,
                 values: dict) -> tuple:
         spec, domain = self.spec, self.domain
-        k_block, k_walk, k_wave = self._keys(launch, machine)
+        k_block, k_front, k_overlap, k_walk = self._keys(launch, machine)
         v_comp, v_alloc, v_store = values[k_block]
         cycles, v_up = values[k_walk]
-        struct = values[k_wave]
+        struct = dict(values[k_front])
+        struct.update(values[k_overlap])
         l1 = l1_rates(
             L1Parts(cycles_per_lup=cycles, v_comp=v_comp, v_up=v_up,
                     v_alloc=v_alloc, v_store=v_store),
@@ -140,6 +241,12 @@ def pallas_task(spec, machine: TPUMachine):
     return estimate_pallas(spec, machine)
 
 
+def pallas_bound_task(spec, machine: TPUMachine) -> float:
+    from ..tpu_adapt import pallas_time_floor
+
+    return pallas_time_floor(spec, machine)
+
+
 class PallasBackend:
     """Estimator-protocol backend over the TPU/Pallas analytical model."""
 
@@ -149,6 +256,25 @@ class PallasBackend:
     def structural_tasks(self, item, machine: TPUMachine) -> list:
         _, spec = item
         return [Task(("pallas", spec, machine), pallas_task, (spec, machine))]
+
+    # ---- tiered bound-then-refine (optional protocol methods) ----------
+    def bound_tasks(self, item, machine: TPUMachine) -> list:
+        _, spec = item
+        return [Task(("pallas-bound", spec, machine), pallas_bound_task,
+                     (spec, machine))]
+
+    def tiers(self, item, machine: TPUMachine) -> list:
+        return [self.structural_tasks(item, machine)]
+
+    def tier_bound(self, item, machine: TPUMachine, values: dict) -> float:
+        _, spec = item
+        bound = values.get(("pallas-bound", spec, machine))
+        # shares the estimate's float ops exactly (monotone max/+) — no
+        # rounding margin needed
+        return bound if bound is not None else float("-inf")
+
+    def primary_time(self, result: EvalResult) -> float:
+        return result.estimate.total_time
 
     def combine(self, item, machine: TPUMachine, values: dict) -> tuple:
         config, spec = item

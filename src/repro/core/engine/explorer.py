@@ -1,40 +1,58 @@
 """The staged exploration engine (DESIGN.md §5).
 
 One ``Explorer`` ranks GPU, TPU, and hypothetical machines through a single
-API.  Pricing a configuration space runs in four stages:
+API.  Pricing a configuration space runs in five stages:
 
   1. **enumerate** — collect the candidate configurations per (workload,
      machine) cell and ask the backend for their structural tasks;
-  2. **dedupe** — resolve structural keys against the invariant cache, so
+  2. **prune** (only with ``top_k`` and a bound-capable backend) — evaluate
+     each configuration's closed-form lower bound on predicted time (cheap:
+     no grid walk, no wave model), then branch-and-bound: configurations
+     refine tier by tier in best-bound-first order, and any configuration
+     whose bound exceeds the current k-th best *refined* time is cut without
+     touching its remaining structural work.  Sound bounds make the returned
+     top-k ranking bitwise identical to exhaustive search;
+  3. **dedupe** — resolve structural keys against the invariant cache, so
      footprint boxes, wave sets, and grid walks are computed once per
      structural equivalence class, not once per configuration;
-  3. **evaluate** — run the missing tasks through the worker pool (batched,
-     deterministic result ordering; errors become outcomes, not crashes);
-  4. **combine & rank** — fold cached values into estimates with the
-     backend's (cheap, exact) combine arithmetic, record skipped
-     configurations with reasons, and stable-sort by the backend's key.
+  4. **evaluate** — run the missing tasks through the worker pool (chunked
+     batches, deterministic result ordering; errors become outcomes, not
+     crashes);
+  5. **combine & rank** — fold cached values into estimates with the
+     backend's (cheap, exact) combine arithmetic, record skipped and pruned
+     configurations with reasons/bounds, and stable-sort by the backend's
+     key.
 
 The cache persists across calls, so a multi-machine or multi-kernel sweep
-(``explore``) pays for shared structure only once.
+(``explore``) pays for shared structure only once — and with
+``Explorer(cache_path=...)`` it persists across *processes*: structural keys
+are pure value tuples, so a warm run reloads every prior computation and
+skips essentially all structural work (see ``engine.invariants``).
 """
 from __future__ import annotations
 
+import bisect
 import dataclasses
 import time
-from dataclasses import dataclass
+from dataclasses import dataclass, field as dc_field
 from typing import Iterable, Sequence
 
 from ..capacity import CapacityModel
 from ..machines import GPUMachine, TPUMachine, TPU_V5E
 from .backends import GPUBackend, PallasBackend
 from .invariants import InvariantCache
-from .pool import run_tasks
+from .pool import TaskPool
 from .protocol import (
     EvalResult,
     ExplorationReport,
+    PrunedConfig,
     SkipConfig,
     SkippedConfig,
 )
+
+# Items advanced per cell per refinement round: big enough to keep the pool
+# batched, small enough that the prune threshold tightens early.
+_ROUND_CHUNK = 16
 
 
 @dataclass
@@ -54,22 +72,127 @@ class Workload:
     capacity: CapacityModel | None = None
 
 
+def _prunable(backend) -> bool:
+    return all(
+        hasattr(backend, m)
+        for m in ("bound_tasks", "tiers", "tier_bound", "primary_time")
+    )
+
+
+@dataclass
+class _Item:
+    """Per-configuration refinement state inside one pruned cell."""
+
+    index: int
+    item: object
+    bound: float = float("-inf")
+    tier: int = 0                 # next tier to resolve
+    tiers: list | None = None     # built lazily — pruned items never need it
+    values: dict = dc_field(default_factory=dict)
+    done: bool = False
+
+
+def _cell_signature(backend, items, machine):
+    """Value signature of one cell, or None when not signable.
+
+    Two cells with equal signatures price identically (combine is a pure
+    function of backend state, item, machine), differing only in workload
+    name — the suite's per-layer plans repeat the same few distinct cells
+    hundreds of times, so the engine evaluates each equivalence class once
+    and clones the results.  Unhashable pieces opt the cell out of sharing
+    (correct, just slower).
+    """
+    if isinstance(backend, GPUBackend):
+        cap = backend.capacity
+        backend_sig = ("gpu", backend.spec, backend.domain,
+                       tuple(sorted(cap.fits.items())))
+    elif isinstance(backend, PallasBackend):
+        backend_sig = ("pallas",)
+    else:
+        return None
+    try:
+        # dict configs hash by insertion-ordered items: generators emit a
+        # stable field order, and an order mismatch merely forgoes sharing
+        items_sig = tuple(
+            (tuple(it[0].items()), it[1])
+            if isinstance(it, tuple) and len(it) == 2
+            and isinstance(it[0], dict) else it
+            for it in items
+        )
+        sig = (backend_sig, items_sig, machine)
+        hash(sig)  # probe hashability once; unhashable -> no sharing
+        return sig
+    except TypeError:
+        return None
+
+
+class _CellRun:
+    """One (workload, backend, items, machine) cell mid-sweep."""
+
+    def __init__(self, wname, backend, items, machine, top_k, prune):
+        self.wname = wname
+        self.backend = backend
+        self.items = items
+        self.machine = machine
+        self.top_k = top_k
+        self.prune = prune
+        self.results: list = []          # combined EvalResults
+        self.skips: list = []            # SkippedConfig
+        self.pruned: list = []           # PrunedConfig
+        self._times: list = []           # sorted primary times of results
+        self.states: list = []           # _Item, bound order (prune mode)
+        self._ranked: list | None = None
+
+    @property
+    def threshold(self) -> float:
+        """k-th best refined primary time, +inf until k results exist."""
+        if self.top_k is None or len(self._times) < self.top_k:
+            return float("inf")
+        return self._times[self.top_k - 1]
+
+    def add_result(self, result) -> None:
+        self.results.append(result)
+        if self.prune:
+            bisect.insort(self._times, self.backend.primary_time(result))
+
+    def ranked_entries(self) -> list:
+        # composite key == stable sort over enumeration order (ties break
+        # toward the earlier-enumerated configuration, as the exhaustive
+        # path has always done); memoized — cell-sharing reads it per clone
+        if self._ranked is None:
+            out = sorted(self.results,
+                         key=lambda r: (*self.backend.sort_key(r), r.index))
+            self._ranked = out[: self.top_k] if self.top_k is not None else out
+        return self._ranked
+
+
 class Explorer:
-    """Staged, memoized, optionally parallel config-space search."""
+    """Staged, memoized, optionally parallel + pruned config-space search."""
 
     def __init__(self, *, parallel: bool = False, max_workers: int | None = None,
-                 cache: InvariantCache | None = None, strict: bool = False):
+                 cache: InvariantCache | None = None,
+                 cache_path: str | None = None, strict: bool = False):
         self.parallel = parallel
         self.max_workers = max_workers
-        self.cache = cache or InvariantCache()
+        if cache is not None and cache_path is not None:
+            raise ValueError("pass either cache or cache_path, not both")
+        if cache_path is not None:
+            cache = InvariantCache(path=cache_path)
+        # explicit None check: an *empty* InvariantCache is falsy (__len__)
+        self.cache = cache if cache is not None else InvariantCache()
         self.strict = strict
 
     # ---- single-cell entry points --------------------------------------
     def rank_gpu(self, spec, machine: GPUMachine, configs=None, *,
                  capacity: CapacityModel | None = None,
                  total_threads: int = 1024, strict: bool | None = None,
-                 progress=None) -> ExplorationReport:
-        """Rank launch configurations of one kernel on one GPU machine."""
+                 top_k: int | None = None, progress=None) -> ExplorationReport:
+        """Rank launch configurations of one kernel on one GPU machine.
+
+        ``top_k`` switches to the tiered bound-then-refine search: only the
+        top-k ranking is returned (bitwise identical to exhaustive search),
+        with bound-eliminated configurations in ``report.pruned``.
+        """
         if configs is None:
             from ..selector import enumerate_gpu_configs
 
@@ -77,23 +200,27 @@ class Explorer:
         backend = GPUBackend(spec, capacity)
         return self._sweep(
             [(spec.name, backend, list(configs), machine)],
-            strict=strict, progress=progress,
+            strict=strict, top_k=top_k, progress=progress,
         )
 
     def rank_pallas(self, candidates: Iterable,
                     machine: TPUMachine = TPU_V5E, *,
                     workload: str | None = None,
-                    strict: bool | None = None) -> ExplorationReport:
+                    strict: bool | None = None,
+                    top_k: int | None = None,
+                    progress=None) -> ExplorationReport:
         """Rank (config, PallasKernelSpec) candidates on one TPU machine."""
         candidates = list(candidates)
         name = workload or (candidates[0][1].name if candidates else "pallas")
         return self._sweep(
-            [(name, PallasBackend(), candidates, machine)], strict=strict
+            [(name, PallasBackend(), candidates, machine)],
+            strict=strict, top_k=top_k, progress=progress,
         )
 
     # ---- sweep front-end ----------------------------------------------
     def explore(self, workloads, machines, configs=None, *,
-                strict: bool | None = None) -> ExplorationReport:
+                strict: bool | None = None, top_k: int | None = None,
+                progress=None) -> ExplorationReport:
         """Price every workload on every machine in one call.
 
         ``workloads``: Workload instances (a bare KernelSpec is promoted to a
@@ -101,6 +228,8 @@ class Explorer:
         ``configs`` optionally overrides the GPU config list for all
         workloads.  Machines a workload defines no candidates for are
         recorded in ``report.skipped`` rather than silently ignored.
+        ``top_k`` enables per-cell pruned search; ``progress(done, total)``
+        is called as configurations reach a terminal state.
         """
         workloads = [
             w if isinstance(w, Workload) else Workload(name=w.name, gpu_spec=w)
@@ -132,14 +261,16 @@ class Explorer:
                     undefined.append(
                         (w, m, f"no backend for machine type "
                                f"{type(m).__name__}"))
-        report = self._sweep(cells, strict=strict)
+        report = self._sweep(cells, strict=strict, top_k=top_k,
+                             progress=progress)
         for w, m, reason in undefined:
             report.skipped.append(
                 SkippedConfig(w.name, m.name, None, reason))
         return report
 
     def explore_plans(self, plans, machines, *,
-                      strict: bool | None = None) -> ExplorationReport:
+                      strict: bool | None = None, top_k: int | None = None,
+                      progress=None) -> ExplorationReport:
         """Price a batch of named workload plans in ONE sweep.
 
         ``plans``: mapping plan name -> iterable of ``Workload``.  Workload
@@ -154,81 +285,262 @@ class Explorer:
             for pname, wls in plans.items()
             for w in wls
         ]
-        return self.explore(namespaced, machines, strict=strict)
+        return self.explore(namespaced, machines, strict=strict, top_k=top_k,
+                            progress=progress)
+
+    # ---- persistence ---------------------------------------------------
+    def save_cache(self) -> int:
+        """Persist the invariant cache if it has a path; returns entries
+        written (0 when not persistent or already clean)."""
+        if self.cache.path and self.cache.dirty:
+            return self.cache.save()
+        return 0
 
     # ---- the staged core ----------------------------------------------
     def _sweep(self, cells, *, strict: bool | None = None,
-               progress=None) -> ExplorationReport:
+               top_k: int | None = None, progress=None) -> ExplorationReport:
         strict = self.strict if strict is None else strict
         t0 = time.perf_counter()
         hits0, misses0 = self.cache.hits, self.cache.misses
-        # stage 1: enumerate items and their structural tasks
-        cell_tasks = []   # parallel to cells: list[list[Task]] per item
-        pending = {}      # key -> (fn, args), first-seen order
-        for _, backend, items, machine in cells:
-            tasks_per_item = [backend.structural_tasks(it, machine)
-                              for it in items]
-            cell_tasks.append(tasks_per_item)
-            # stage 2: dedupe against the invariant cache; a hit is a task
-            # evaluation avoided (cached earlier or already queued this sweep)
-            for tl in tasks_per_item:
-                for t in tl:
-                    if t.key in pending:
-                        self.cache.count_hit()
-                    elif self.cache.lookup(t.key) is None:
-                        pending[t.key] = (t.fn, t.args)
-        # stage 3: batched evaluation, deterministic ordering
-        outcomes = run_tasks(list(pending.values()), parallel=self.parallel,
-                             max_workers=self.max_workers)
-        for key, outcome in zip(pending, outcomes):
-            self.cache.store(key, outcome)
-        # stage 4: combine + rank per cell
+        stats = {"pool_tasks": 0, "bound_evals": 0, "shared_cells": 0}
+        # cell-level dedupe: structurally identical cells (equal backend
+        # state, items, machine) are priced once and cloned per name — the
+        # suite's per-layer plans repeat a handful of distinct cells
+        # hundreds of times
+        runs, sources, by_sig = [], [], {}
+        for wname, backend, items, machine in cells:
+            sig = _cell_signature(backend, items, machine)
+            owner = by_sig.get(sig) if sig is not None else None
+            if owner is not None:
+                sources.append((wname, owner))
+                stats["shared_cells"] += 1
+                continue
+            run = _CellRun(wname, backend, items, machine, top_k,
+                           prune=top_k is not None and _prunable(backend))
+            runs.append(run)
+            sources.append((wname, run))
+            if sig is not None:
+                by_sig[sig] = run
+        total_items = sum(len(run.items) for _, run in sources)
+        done_items = 0
+
+        def _advance(n):
+            nonlocal done_items
+            done_items += n
+            if progress and n:
+                progress(done_items, total_items)
+
+        with TaskPool(parallel=self.parallel,
+                      max_workers=self.max_workers) as pool:
+            exhaustive = [r for r in runs if not r.prune]
+            pruned_runs = [r for r in runs if r.prune]
+            if exhaustive:
+                self._run_exhaustive(exhaustive, pool, strict, stats,
+                                     _advance)
+            if pruned_runs:
+                self._run_pruned(pruned_runs, pool, strict, stats, _advance)
+
         report = ExplorationReport()
-        for (wname, backend, items, machine), tasks_per_item in zip(
-                cells, cell_tasks):
-            results = []
-            for idx, (item, tl) in enumerate(zip(items, tasks_per_item)):
-                values, err = {}, None
-                for t in tl:
-                    status, val = self.cache.peek(t.key)
-                    if status == "err":
-                        # estimation errors become skips; anything else is a
-                        # programming error and propagates, matching what the
-                        # monolithic path (and the combine stage) would do
-                        if not isinstance(val, (SkipConfig, ValueError,
-                                                RuntimeError)):
-                            raise val
-                        err = val
-                        break
-                    values[t.key] = val
-                if err is None:
-                    try:
-                        config, est, perf, limiter = backend.combine(
-                            item, machine, values)
-                        results.append(EvalResult(
-                            workload=wname, machine=machine.name,
-                            backend=backend.name, index=idx, config=config,
-                            estimate=est, perf=perf, limiter=limiter))
-                    except (SkipConfig, ValueError, RuntimeError) as exc:
-                        err = exc
-                if err is not None:
-                    if strict and not isinstance(err, SkipConfig):
-                        raise err
-                    report.skipped.append(SkippedConfig(
-                        wname, machine.name, _item_config(item),
-                        f"{type(err).__name__}: {err}"))
-                if progress:
-                    progress(idx + 1, len(items))
-            results.sort(key=backend.sort_key)
-            report.entries.extend(results)
+        for wname, run in sources:
+            if run.wname == wname:
+                report.entries.extend(run.ranked_entries())
+                report.skipped.extend(run.skips)
+                report.pruned.extend(run.pruned)
+                continue
+            # direct construction: dataclasses.replace dominated suite
+            # sweeps at ~180k clones per run
+            report.entries.extend(
+                EvalResult(wname, e.machine, e.backend, e.index, e.config,
+                           e.estimate, e.perf, e.limiter)
+                for e in run.ranked_entries())
+            report.skipped.extend(
+                SkippedConfig(wname, s.machine, s.config, s.reason)
+                for s in run.skips)
+            report.pruned.extend(
+                PrunedConfig(wname, p.machine, p.config, p.bound, p.threshold)
+                for p in run.pruned)
+            _advance(len(run.items))
         # per-sweep deltas (a reused Explorer's cache is cumulative)
         report.cache_stats = {
             "hits": self.cache.hits - hits0,
             "misses": self.cache.misses - misses0,
             "entries": len(self.cache),
+            "pool_tasks": stats["pool_tasks"],
+            "bound_evals": stats["bound_evals"],
+            "cells": len(runs),
+            "shared_cells": stats["shared_cells"],
+            "evaluated": sum(len(r.results) for r in runs),
+            "pruned": sum(len(r.pruned) for r in runs),
         }
         report.wall_time_s = time.perf_counter() - t0
+        self.save_cache()
         return report
+
+    # ---- shared plumbing ----------------------------------------------
+    def _resolve_batch(self, tasks, pool, stats) -> None:
+        """Dedupe a batch of tasks against the cache and evaluate the
+        missing ones through the pool (outcomes stored, order-stable)."""
+        pending = {}
+        for t in tasks:
+            if t.key in pending:
+                self.cache.count_hit()
+            elif self.cache.lookup(t.key) is None:
+                pending[t.key] = (t.fn, t.args)
+        outcomes = pool.run(list(pending.values()))
+        for key, outcome in zip(pending, outcomes):
+            self.cache.store(key, outcome)
+        stats["pool_tasks"] += len(pending)
+
+    def _read_values(self, tasks, values, strict):
+        """Copy resolved task outcomes into ``values``; return the first
+        estimation error (or raise a programming error / strict error)."""
+        for t in tasks:
+            status, val = self.cache.peek(t.key)
+            if status == "err":
+                # estimation errors become skips; anything else is a
+                # programming error and propagates, matching what the
+                # monolithic path (and the combine stage) would do
+                if not isinstance(val, (SkipConfig, ValueError,
+                                        RuntimeError)):
+                    raise val
+                if strict and not isinstance(val, SkipConfig):
+                    raise val
+                return val
+            values[t.key] = val
+        return None
+
+    def _combine(self, run, item, index, values, strict) -> bool:
+        """Fold values into a result (True) or a recorded skip (False)."""
+        try:
+            config, est, perf, limiter = run.backend.combine(
+                item, run.machine, values)
+        except (SkipConfig, ValueError, RuntimeError) as exc:
+            if strict and not isinstance(exc, SkipConfig):
+                raise
+            run.skips.append(SkippedConfig(
+                run.wname, run.machine.name, _item_config(item),
+                f"{type(exc).__name__}: {exc}"))
+            return False
+        run.add_result(EvalResult(
+            workload=run.wname, machine=run.machine.name,
+            backend=run.backend.name, index=index, config=config,
+            estimate=est, perf=perf, limiter=limiter))
+        return True
+
+    def _skip(self, run, item, err) -> None:
+        run.skips.append(SkippedConfig(
+            run.wname, run.machine.name, _item_config(item),
+            f"{type(err).__name__}: {err}"))
+
+    # ---- exhaustive path -----------------------------------------------
+    def _run_exhaustive(self, runs, pool, strict, stats, advance) -> None:
+        cell_tasks = []
+        all_tasks = []
+        for run in runs:
+            tasks_per_item = [
+                run.backend.structural_tasks(it, run.machine)
+                for it in run.items
+            ]
+            cell_tasks.append(tasks_per_item)
+            for tl in tasks_per_item:
+                all_tasks.extend(tl)
+        self._resolve_batch(all_tasks, pool, stats)
+        for run, tasks_per_item in zip(runs, cell_tasks):
+            for idx, (item, tl) in enumerate(zip(run.items, tasks_per_item)):
+                values = {}
+                err = self._read_values(tl, values, strict)
+                if err is not None:
+                    self._skip(run, item, err)
+                else:
+                    self._combine(run, item, idx, values, strict)
+                advance(1)
+
+    # ---- tiered bound-then-refine path ----------------------------------
+    def _run_pruned(self, runs, pool, strict, stats, advance) -> None:
+        # bound stage: resolve the cheap bound tasks for every item in one
+        # batched pool pass (cached — warm runs and extent-sharing configs
+        # pay nothing), then order each cell's items best-bound-first
+        bound_tasks_per_run = []
+        all_bound_tasks = []
+        for run in runs:
+            per_item = [run.backend.bound_tasks(item, run.machine)
+                        for item in run.items]
+            bound_tasks_per_run.append(per_item)
+            for tl in per_item:
+                all_bound_tasks.extend(tl)
+        pool_before = stats["pool_tasks"]
+        self._resolve_batch(all_bound_tasks, pool, stats)
+        # bound evaluations are accounted separately from structural work
+        stats["bound_evals"] += stats["pool_tasks"] - pool_before
+        stats["pool_tasks"] = pool_before
+
+        for run, per_item in zip(runs, bound_tasks_per_run):
+            states = []
+            for idx, (item, tl) in enumerate(zip(run.items, per_item)):
+                st = _Item(index=idx, item=item)
+                err = self._read_values(tl, st.values, strict)
+                if err is not None:
+                    self._skip(run, item, err)
+                    st.done = True
+                    advance(1)
+                else:
+                    st.bound = run.backend.tier_bound(item, run.machine,
+                                                      st.values)
+                states.append(st)
+            # stable best-bound-first order; index breaks ties so the
+            # refinement schedule (and thus every threshold update) is
+            # deterministic
+            run.states = sorted(states, key=lambda s: (s.bound, s.index))
+
+        # refinement rounds: each round advances the best-bound frontier of
+        # every cell by one tier (cross-cell batched through one pool call),
+        # then re-bounds and prunes against the tightening k-th-best time.
+        # The small per-round chunk is load-bearing for prune quality, not
+        # just batching: the threshold only tightens as chunks *complete*,
+        # and most pruning happens when later items' (re-tightened) bounds
+        # meet an already-converged threshold — advancing every survivor at
+        # once would freeze the threshold at its seed value and refine
+        # nearly everything.
+        while True:
+            round_work = []  # (run, state, tier tasks)
+            for run in runs:
+                chunk = 0
+                for st in run.states:
+                    if st.done:
+                        continue
+                    if st.bound > run.threshold:
+                        run.pruned.append(PrunedConfig(
+                            run.wname, run.machine.name,
+                            _item_config(st.item), st.bound, run.threshold))
+                        st.done = True
+                        advance(1)
+                        continue
+                    if chunk >= _ROUND_CHUNK:
+                        continue
+                    chunk += 1
+                    if st.tiers is None:
+                        st.tiers = [list(t) for t in
+                                    run.backend.tiers(st.item, run.machine)]
+                    round_work.append((run, st, st.tiers[st.tier]))
+            if not round_work:
+                break
+            self._resolve_batch(
+                [t for _, _, tasks in round_work for t in tasks], pool, stats)
+            for run, st, tasks in round_work:
+                err = self._read_values(tasks, st.values, strict)
+                if err is not None:
+                    self._skip(run, st.item, err)
+                    st.done = True
+                    advance(1)
+                    continue
+                st.tier += 1
+                if st.tier >= len(st.tiers):
+                    self._combine(run, st.item, st.index, st.values, strict)
+                    st.done = True
+                    advance(1)
+                else:
+                    st.bound = run.backend.tier_bound(
+                        st.item, run.machine, st.values)
 
 
 def _item_config(item):

@@ -10,30 +10,90 @@ family of configurations sharing a degenerate extent is skipped in O(1).
 
 Entries are ``("ok", value)`` or ``("err", exception)`` outcome pairs — the
 same shape the worker pool returns — so pool results can be stored verbatim.
+
+Persistence (DESIGN.md §5): structural keys are pure value tuples (frozen
+dataclasses hash and compare by value across processes), so the cache can be
+written to disk and reloaded by a later run.  The on-disk format is a
+content-addressed blob: a header pickle ``{magic, version}``, then
+``digest = sha256(magic || version || payload)``, then ``payload =
+pickle([(key, outcome), ...])`` — one pickle for all entries, so keys
+sharing sub-objects (every config of one kernel embeds the same spec tree)
+are stored once and reload as shared objects.  The digest binds the payload
+to ``ENGINE_CACHE_VERSION``: a cache written by an engine with different
+task semantics, and any corrupted or truncated payload, is rejected
+wholesale — loads never raise on bad files, they just come back cold.
+Writes are atomic (temp file + ``os.replace``).
 """
 from __future__ import annotations
 
+import hashlib
+import io
+import os
+import pickle
+import tempfile
 from typing import Hashable
+
+# Bump whenever a structural task's semantics, arguments, or key schema
+# change: the digest of every persisted entry covers this value, so caches
+# from older engines are ignored (not migrated) on load.  History:
+#   1 — PR 1 task set (gpu-block / gpu-walk / gpu-wave / pallas)
+#   2 — tiered task set (gpu-wave split into front + overlap for the
+#       bound-then-refine search)
+ENGINE_CACHE_VERSION = 2
+
+_MAGIC = b"repro-invariant-cache"
+
+
+def _digest(payload: bytes) -> bytes:
+    h = hashlib.sha256()
+    h.update(_MAGIC)
+    h.update(str(ENGINE_CACHE_VERSION).encode())
+    h.update(payload)
+    return h.digest()
 
 
 class InvariantCache:
-    """Outcome store keyed by structural keys, with hit/miss accounting."""
+    """Outcome store keyed by structural keys, with hit/miss accounting.
 
-    def __init__(self):
+    ``path`` enables persistence: the constructor loads any compatible
+    entries found there, and ``save()`` (called by the Explorer after each
+    sweep that added entries) atomically rewrites the file.
+    """
+
+    def __init__(self, path: str | os.PathLike | None = None):
         self._store: dict = {}
+        # entries restored from disk wait here and migrate to ``_store``
+        # under the *caller's* key object on first probe: unpickled keys
+        # deep-compare their whole spec trees on every dict probe, while
+        # this process's keys share interned spec objects (identity-fast
+        # equality) — lazy re-keying makes warm sweeps probe at full speed
+        self._loaded: dict = {}
         self.hits = 0
         self.misses = 0
+        self.path = os.fspath(path) if path is not None else None
+        self._dirty = False
+        self.loaded_entries = 0
+        if self.path:
+            self.loaded_entries = self.load()
 
     def __contains__(self, key: Hashable) -> bool:
-        return key in self._store
+        return key in self._store or key in self._loaded
 
     def __len__(self) -> int:
-        return len(self._store)
+        return len(self._store) + len(self._loaded)
+
+    def _get(self, key: Hashable):
+        out = self._store.get(key)
+        if out is None and self._loaded:
+            out = self._loaded.pop(key, None)
+            if out is not None:
+                self._store[key] = out      # re-keyed: one slow probe ever
+        return out
 
     def lookup(self, key: Hashable):
         """Return the cached outcome pair or None, counting a hit (a task
         evaluation avoided) or a miss (a task that must be computed)."""
-        out = self._store.get(key)
+        out = self._get(key)
         if out is None:
             self.misses += 1
         else:
@@ -42,7 +102,7 @@ class InvariantCache:
 
     def peek(self, key: Hashable):
         """Uncounted read — for result assembly, not sharing decisions."""
-        return self._store.get(key)
+        return self._get(key)
 
     def count_hit(self) -> None:
         """Record sharing that bypasses the store (intra-sweep dedupe of a
@@ -51,11 +111,108 @@ class InvariantCache:
 
     def store(self, key: Hashable, outcome: tuple) -> None:
         self._store[key] = outcome
+        self._dirty = True
 
     def stats(self) -> dict:
         return {"hits": self.hits, "misses": self.misses,
-                "entries": len(self._store)}
+                "entries": len(self)}
 
     def clear(self) -> None:
         self._store.clear()
+        self._loaded.clear()
         self.hits = self.misses = 0
+        self._dirty = True
+
+    # ---- persistence ---------------------------------------------------
+    def load(self, path: str | None = None) -> int:
+        """Merge compatible entries from disk; return how many were added.
+
+        Corruption-tolerant by construction: an unreadable file, a foreign
+        or version-mismatched header, and a payload whose content digest
+        does not verify all degrade to "no cached entries", never to an
+        exception — a cold run is always correct, just slower.
+        """
+        path = path or self.path
+        if not path or not os.path.exists(path):
+            return 0
+        try:
+            with open(path, "rb") as f:
+                header = pickle.load(f)
+                if not (isinstance(header, dict)
+                        and header.get("magic") == _MAGIC
+                        and header.get("version") == ENGINE_CACHE_VERSION):
+                    return 0
+                digest = pickle.load(f)
+                payload = f.read()
+            if _digest(payload) != digest:
+                return 0
+            records = pickle.loads(payload)
+        except Exception:
+            return 0
+        loaded = 0
+        for record in records if isinstance(records, list) else []:
+            try:
+                key, outcome = record
+                if key not in self._store and key not in self._loaded:
+                    self._loaded[key] = outcome
+                    loaded += 1
+            except Exception:
+                continue
+        return loaded
+
+    def save(self, path: str | None = None) -> int:
+        """Atomically persist the store; return how many entries were written.
+
+        Entries that cannot be pickled (e.g. exotic cached exceptions) are
+        dropped silently — the persistent cache is an accelerator, not a
+        database.
+        """
+        path = path or self.path
+        if not path:
+            return 0
+        records = [(key, outcome)
+                   for source in (self._store, self._loaded)
+                   for key, outcome in source.items()]
+        try:
+            payload = pickle.dumps(records,
+                                   protocol=pickle.HIGHEST_PROTOCOL)
+        except Exception:
+            # drop individually unpicklable entries (exotic cached
+            # exceptions), then retry once
+            safe = []
+            for record in records:
+                try:
+                    pickle.dumps(record, protocol=pickle.HIGHEST_PROTOCOL)
+                except Exception:
+                    continue
+                safe.append(record)
+            records = safe
+            try:
+                payload = pickle.dumps(records,
+                                       protocol=pickle.HIGHEST_PROTOCOL)
+            except Exception:
+                return 0
+        buf = io.BytesIO()
+        pickle.dump({"magic": _MAGIC, "version": ENGINE_CACHE_VERSION}, buf)
+        pickle.dump(_digest(payload), buf)
+        buf.write(payload)
+        d = os.path.dirname(os.path.abspath(path))
+        os.makedirs(d, exist_ok=True)
+        fd, tmp = tempfile.mkstemp(dir=d, prefix=".invcache-")
+        try:
+            with os.fdopen(fd, "wb") as f:
+                f.write(buf.getvalue())
+            os.replace(tmp, path)
+        except Exception:
+            try:
+                os.unlink(tmp)
+            except OSError:
+                pass
+            return 0
+        self._dirty = False
+        return len(records)
+
+    @property
+    def dirty(self) -> bool:
+        """True when entries were added since the last successful save."""
+        return self._dirty

@@ -8,6 +8,12 @@ what the engine computes, only how fast.
 Every task is wrapped so worker exceptions come back as values: the engine
 turns them into skipped-config records (or re-raises under strict mode)
 instead of tearing down the whole sweep.
+
+Tasks are submitted in *chunks* of roughly ``4 x workers`` batches per run:
+a suite sweep produces thousands of sub-millisecond structural tasks, and
+one future per task makes pickling/IPC the dominant cost.  Chunking keeps
+every worker busy while amortizing the round-trip; flattening the chunked
+results preserves submission order exactly.
 """
 from __future__ import annotations
 
@@ -16,6 +22,10 @@ import os
 import sys
 from concurrent.futures import ProcessPoolExecutor
 from typing import Sequence
+
+# Chunks submitted per worker per run: enough slack for load balancing
+# between uneven task costs, few enough that IPC stays amortized.
+_CHUNKS_PER_WORKER = 4
 
 
 def guarded_call(fn, args) -> tuple:
@@ -27,8 +37,38 @@ def guarded_call(fn, args) -> tuple:
         return ("err", exc)
 
 
+def guarded_batch(calls: Sequence[tuple]) -> list:
+    """Worker-side loop over one chunk of ``(fn, args)`` calls."""
+    return [guarded_call(fn, args) for fn, args in calls]
+
+
 def default_workers() -> int:
-    return max(os.cpu_count() or 1, 1)
+    """Worker count: CPUs actually *available* to this process, optionally
+    capped by ``REPRO_MAX_WORKERS``.
+
+    ``os.cpu_count()`` reports the host's cores, which oversubscribes
+    affinity-restricted CI containers — prefer ``os.process_cpu_count()``
+    (3.13+) or the scheduler affinity mask where the platform has them.
+    The env var can only lower the count (a cap, not an override).
+    """
+    avail = None
+    if hasattr(os, "process_cpu_count"):
+        avail = os.process_cpu_count()
+    elif hasattr(os, "sched_getaffinity"):
+        try:
+            avail = len(os.sched_getaffinity(0))
+        except OSError:
+            avail = None
+    n = avail or os.cpu_count() or 1
+    env = os.environ.get("REPRO_MAX_WORKERS")
+    if env:
+        try:
+            cap = int(env)
+        except ValueError:
+            cap = 0
+        if cap > 0:
+            n = min(n, cap)
+    return max(n, 1)
 
 
 def _context():
@@ -58,6 +98,73 @@ def _main_reimportable() -> bool:
     return bool(path) and os.path.exists(path)
 
 
+def _chunk(calls: list, n_chunks: int) -> list:
+    size = max(1, -(-len(calls) // n_chunks))
+    return [calls[i:i + size] for i in range(0, len(calls), size)]
+
+
+class TaskPool:
+    """A reusable worker pool for the rounds of one exploration sweep.
+
+    The tiered search evaluates tasks in several rounds (bound, refine
+    tiers, final combine inputs); spinning a fresh ``ProcessPoolExecutor``
+    per round would pay worker startup each time.  ``TaskPool`` creates the
+    executor lazily on the first non-trivial round and reuses it; a warm
+    (fully cached) sweep never forks at all.
+
+    Use as a context manager; ``run`` mirrors ``run_tasks`` semantics.
+    """
+
+    def __init__(self, parallel: bool = False, max_workers: int | None = None):
+        self.parallel = parallel
+        self.workers = max_workers or default_workers()
+        self._executor = None
+        self._broken = False
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        self.close()
+        return False
+
+    def close(self) -> None:
+        if self._executor is not None:
+            self._executor.shutdown()
+            self._executor = None
+
+    def _ensure_executor(self):
+        if self._executor is None and not self._broken:
+            ctx = _context()
+            if ctx is None:
+                self._broken = True
+                return None
+            try:
+                self._executor = ProcessPoolExecutor(
+                    max_workers=self.workers, mp_context=ctx)
+            except (OSError, ValueError, RuntimeError):
+                self._broken = True
+        return self._executor
+
+    def run(self, calls: Sequence[tuple]) -> list:
+        """Evaluate ``[(fn, args), ...]``, outcomes in input order."""
+        calls = list(calls)
+        if not (self.parallel and self.workers > 1 and len(calls) > 1):
+            return guarded_batch(calls)
+        ex = self._ensure_executor()
+        if ex is None:
+            return guarded_batch(calls)
+        chunks = _chunk(calls, self.workers * _CHUNKS_PER_WORKER)
+        try:
+            futures = [ex.submit(guarded_batch, chunk) for chunk in chunks]
+            return [out for f in futures for out in f.result()]
+        except (OSError, ValueError, RuntimeError):
+            # pool died mid-flight (e.g. sandboxed fork) — never again
+            self._broken = True
+            self.close()
+            return guarded_batch(calls)
+
+
 def run_tasks(
     calls: Sequence[tuple],
     parallel: bool = False,
@@ -65,20 +172,10 @@ def run_tasks(
 ) -> list:
     """Evaluate ``[(fn, args), ...]`` and return outcomes in input order.
 
-    ``parallel=True`` uses a fork-based process pool (falling back to the
-    serial path when only one worker is available, the batch is tiny, or no
-    usable multiprocessing start method exists).
+    One-shot wrapper over ``TaskPool`` (kept for API compatibility and
+    single-round callers): ``parallel=True`` uses a fork-based process pool,
+    falling back to the serial path when only one worker is available, the
+    batch is tiny, or no usable multiprocessing start method exists.
     """
-    calls = list(calls)
-    workers = max_workers or default_workers()
-    ctx = _context() if parallel else None
-    if ctx is not None and workers > 1 and len(calls) > 1:
-        try:
-            with ProcessPoolExecutor(max_workers=min(workers, len(calls)),
-                                     mp_context=ctx) as ex:
-                futures = [ex.submit(guarded_call, fn, args)
-                           for fn, args in calls]
-                return [f.result() for f in futures]
-        except (OSError, ValueError, RuntimeError):
-            pass  # pool unavailable (e.g. sandboxed) — fall through to serial
-    return [guarded_call(fn, args) for fn, args in calls]
+    with TaskPool(parallel=parallel, max_workers=max_workers) as pool:
+        return pool.run(calls)

@@ -64,6 +64,19 @@ class SkippedConfig:
     reason: str
 
 
+@dataclass
+class PrunedConfig:
+    """A configuration the tiered search proved out of the top-k without
+    refining it: its lower bound on predicted time already exceeded the
+    ``threshold`` (the k-th best fully refined time when it was cut)."""
+
+    workload: str
+    machine: str
+    config: Any
+    bound: float
+    threshold: float
+
+
 @runtime_checkable
 class Estimator(Protocol):
     """What the Explorer requires of a backend (contract in DESIGN.md §5)."""
@@ -86,18 +99,54 @@ class Estimator(Protocol):
         enumeration order)."""
         ...
 
+    # ---- optional: tiered bound-then-refine search (DESIGN.md §5) ------
+    # A backend that additionally implements the four methods below opts
+    # into branch-and-bound pruning when the caller requests a ``top_k``.
+    # The engine only ever prunes a configuration whose *lower bound* on
+    # primary time strictly exceeds the k-th best fully refined time, so
+    # the returned top-k ranking is bitwise identical to exhaustive search
+    # for any sound bound.
+    #
+    # def bound_tasks(self, item, machine) -> Sequence[Task]:
+    #     """Cheap tasks (closed-form volumes, no grid walk / wave model)
+    #     the prune stage resolves inline before any pool work.  Their
+    #     values flow into ``tier_bound`` and later into ``combine``."""
+    #
+    # def tiers(self, item, machine) -> Sequence[Sequence[Task]]:
+    #     """Ordered partition of the remaining structural tasks, cheapest
+    #     signal first; ``tier_bound`` is re-evaluated after each tier so
+    #     the bound tightens as structure resolves.  The union of
+    #     ``bound_tasks`` and all tiers must equal ``structural_tasks``."""
+    #
+    # def tier_bound(self, item, machine, values) -> float:
+    #     """Sound lower bound on the item's primary time given whatever
+    #     task values are present in ``values`` (monotonically tightening
+    #     as more keys resolve)."""
+    #
+    # def primary_time(self, result: EvalResult) -> float:
+    #     """The ascending scalar ``tier_bound`` bounds (e.g. predicted
+    #     time per work unit); must order identically to the leading
+    #     component of ``sort_key``."""
+
 
 @dataclass
 class ExplorationReport:
     """Structured result of an exploration sweep.
 
     ``entries`` hold every feasible priced configuration, ranked within each
-    (workload, machine) cell; ``skipped`` records every dropped configuration
-    with its reason — nothing is silently swallowed.
+    (workload, machine) cell (truncated to ``top_k`` per cell when the sweep
+    ran with one); ``skipped`` records every configuration dropped with an
+    error reason, and ``pruned`` every configuration the tiered search
+    proved out of the top-k from its bound alone — nothing is silently
+    swallowed.  ``cache_stats`` carries per-sweep deltas: invariant-cache
+    ``hits``/``misses``/``entries``, ``pool_tasks`` (structural tasks
+    actually evaluated), ``bound_evals`` (cheap bound-stage evaluations),
+    and ``evaluated``/``pruned`` configuration counts.
     """
 
     entries: list = dc_field(default_factory=list)        # list[EvalResult]
     skipped: list = dc_field(default_factory=list)        # list[SkippedConfig]
+    pruned: list = dc_field(default_factory=list)         # list[PrunedConfig]
     cache_stats: dict = dc_field(default_factory=dict)
     wall_time_s: float = 0.0
 
@@ -132,6 +181,25 @@ class ExplorationReport:
             and (machine is None or s.machine == machine)
         ]
 
+    def pruned_for(self, workload: str | None = None,
+                   machine: str | None = None) -> list:
+        return [
+            p for p in self.pruned
+            if (workload is None or p.workload == workload)
+            and (machine is None or p.machine == machine)
+        ]
+
+    @property
+    def prune_rate(self) -> float:
+        """Fraction of refinable configurations eliminated by bounds alone.
+
+        Computed from ``cache_stats`` (``entries`` is truncated to top-k, so
+        counting it would overstate pruning whenever more than k configs
+        were fully evaluated)."""
+        pruned = self.cache_stats.get("pruned", len(self.pruned))
+        total = self.cache_stats.get("evaluated", len(self.entries)) + pruned
+        return pruned / total if total else 0.0
+
     # ---- attribution ---------------------------------------------------
     def limiter_attribution(self, workload: str | None = None) -> dict:
         """(workload, machine) -> {limiter: config count} over all priced
@@ -165,9 +233,11 @@ class ExplorationReport:
 
     def summary(self) -> str:
         n_cells = len(self.cells())
+        pruned = f", {len(self.pruned)} pruned" if self.pruned else ""
         return (
             f"{len(self.entries)} configs priced across {n_cells} "
-            f"(workload, machine) cells, {len(self.skipped)} skipped; "
+            f"(workload, machine) cells, {len(self.skipped)} skipped"
+            f"{pruned}; "
             f"invariant cache: {self.cache_stats.get('hits', 0)} hits / "
             f"{self.cache_stats.get('misses', 0)} misses; "
             f"{self.wall_time_s:.2f}s wall"

@@ -25,6 +25,15 @@ def footprint_boxes(
     return dict(per_field)
 
 
+def union_bytes_by_field(per_field_boxes: dict, line_bytes: int) -> int:
+    """Exact union volume (bytes) of a ``footprint_boxes`` result.
+
+    Shared by the wave model's front/overlap split and the single-access
+    volume floors: addresses of different fields never alias, so the total
+    is the per-field union count summed (all integer math)."""
+    return sum(count_union(b) for b in per_field_boxes.values()) * line_bytes
+
+
 def footprint_lines(
     accesses: Sequence[Access], domain_boxes: Sequence[Box], line_bytes: int
 ) -> int:

@@ -23,7 +23,12 @@ from dataclasses import dataclass, field as dc_field
 
 from .access import KernelSpec, LaunchConfig
 from .capacity import CapacityModel
-from .footprint import footprint_boxes, footprint_bytes, overlap_bytes
+from .footprint import (
+    footprint_boxes,
+    footprint_bytes,
+    overlap_bytes,
+    union_bytes_by_field,
+)
 from .gridwalk import block_footprint_bytes, walk_block_l1, warp_sector_requests
 from .isets import (
     box_intersect,
@@ -133,43 +138,90 @@ def estimate_l1(spec: KernelSpec, launch: LaunchConfig, machine: GPUMachine,
 # --------------------------------------------------------------------------
 # DRAM stage
 # --------------------------------------------------------------------------
-def dram_structure(spec: KernelSpec, launch: LaunchConfig, machine: GPUMachine,
-                   domain=None, block_store_bytes: int | None = None) -> dict:
-    """Wave-model footprint counts (§4.4) — everything that does not depend on
-    cache capacities, so the result is shareable across machines that differ
-    only in L2 size (hypothetical-GPU exploration).
+# The wave-model structure is computed in two pieces with very different
+# costs, so the tiered search (engine §5) can price the cheap piece for every
+# candidate and reserve the expensive piece for the bound-surviving frontier:
+#
+#   * ``dram_front_structure`` — wave/layer *footprint volumes* (unions
+#     only): compulsory load and store volumes, layer-set load footprints
+#     and allocation volumes.  Enough for the sound DRAM lower bound (the
+#     realized reuse can never exceed min(v_comp, r_y*v_y + r_z*v_z), since
+#     the per-dimension overlaps are disjoint subsets of the wave footprint).
+#   * ``dram_overlap_structure`` — the wave ∩ layer *intersection* counts
+#     (pairwise box intersections + the triple-overlap correction), the
+#     dominant cost of the full wave model.
+#
+# ``dram_structure`` composes the two, so the monolithic path and the tiered
+# engine path are bitwise identical by construction (every count is exact
+# integer math; the merge introduces no float reassociation).
 
-    ``block_store_bytes`` optionally injects a precomputed interior-block
-    store footprint (the implicit-set path is property-tested equal to the
-    enumeration oracle used by default).
-    """
-    domain = domain or spec.domain
+
+def _wave_layer_boxes(spec: KernelSpec, launch: LaunchConfig,
+                      machine: GPUMachine):
+    """Shared box construction: wave sets + sector-granular load-footprint
+    box lists of the wave and the y/z layer sets (cheap; the counting on
+    top of them is what the front/overlap stages split)."""
     ws = build_wave_sets(spec, launch, machine.n_sms,
                          max_threads_per_sm=machine.max_threads_per_sm)
+    sect = machine.sector_bytes
+    f_wave = footprint_boxes(spec.loads, ws.wave, sect)
+    f_y = footprint_boxes(spec.loads, ws.y_layer, sect) if ws.y_layer else {}
+    f_z = footprint_boxes(spec.loads, ws.z_layer, sect) if ws.z_layer else {}
+    return ws, f_wave, f_y, f_z
+
+
+def _front_counts(spec, launch, machine, domain, ws, f_wave, f_y, f_z,
+                  block_store_bytes):
+    sect = machine.sector_bytes
     wave_pts = count_union(ws.wave)
     if wave_pts == 0:
         raise ValueError("empty wave")
-    sect = machine.sector_bytes
-    # compulsory load volume of the wave
-    f_wave = footprint_boxes(spec.loads, ws.wave, sect)
-    v_comp = sum(count_union(b) for b in f_wave.values()) * sect
+    # compulsory load volume of the wave; layer-set load footprints bound
+    # the potential reuse from above, allocation volumes drive hit-rates
+    v_comp = union_bytes_by_field(f_wave, sect)
+    v_y = union_bytes_by_field(f_y, sect) if f_y else 0
+    v_z = union_bytes_by_field(f_z, sect) if f_z else 0
+    alloc_y = (footprint_bytes(spec.accesses, ws.y_layer, machine.line_bytes)
+               if f_y else 0)
+    alloc_z = (footprint_bytes(spec.accesses, ws.z_layer, machine.line_bytes)
+               if f_z else 0)
 
-    # --- warm-cache reuse via per-dimension layer sets (§4.4.2) ---------
+    # --- stores ---------------------------------------------------------
+    v_store_comp = footprint_bytes(spec.stores, ws.wave, sect)
+    # per-block redundancy: sum of block store footprints vs wave unique
+    if block_store_bytes is None:
+        bidx = _interior_block(ws.grid)
+        block_store_bytes = block_footprint_bytes(
+            spec, launch, sect, "stores", domain, bidx
+        )
+    alloc_wave = footprint_bytes(spec.accesses, ws.wave, machine.line_bytes)
+    return {
+        "wave_pts": wave_pts,
+        "n_blocks": ws.n_blocks,
+        "has_y": bool(f_y),
+        "has_z": bool(f_z),
+        "v_comp": v_comp,
+        "v_y": v_y,
+        "v_z": v_z,
+        "alloc_y": alloc_y,
+        "alloc_z": alloc_z,
+        "v_store_comp": v_store_comp,
+        "block_store_bytes": block_store_bytes,
+        "alloc_wave": alloc_wave,
+    }
+
+
+def _overlap_counts(f_wave, f_y, f_z, sect):
     v_ov_y = v_ov_z = 0.0
-    alloc_y = alloc_z = 0
     triple = 0
-    f_y = footprint_boxes(spec.loads, ws.y_layer, sect) if ws.y_layer else {}
-    f_z = footprint_boxes(spec.loads, ws.z_layer, sect) if ws.z_layer else {}
     if f_y:
         v_ov_y = sum(
             count_intersection_of_unions(f_wave[k], f_y[k]) for k in f_wave if k in f_y
         ) * sect
-        alloc_y = footprint_bytes(spec.accesses, ws.y_layer, machine.line_bytes)
     if f_z:
         v_ov_z = sum(
             count_intersection_of_unions(f_wave[k], f_z[k]) for k in f_wave if k in f_z
         ) * sect
-        alloc_z = footprint_bytes(spec.accesses, ws.z_layer, machine.line_bytes)
         if f_y:
             # overlap of all three (wave ∩ z ∩ y) — subtract from z credit
             for k in f_wave:
@@ -187,30 +239,53 @@ def dram_structure(spec: KernelSpec, launch: LaunchConfig, machine: GPUMachine,
                 if inter:
                     triple += count_intersection_of_unions(inter, y_k)
         v_ov_z = max(0.0, v_ov_z - triple * sect)
+    return {"v_ov_y": v_ov_y, "v_ov_z": v_ov_z}
 
-    # --- stores ---------------------------------------------------------
-    v_store_comp = footprint_bytes(spec.stores, ws.wave, sect)
-    # per-block redundancy: sum of block store footprints vs wave unique
-    if block_store_bytes is None:
-        bidx = _interior_block(ws.grid)
-        block_store_bytes = block_footprint_bytes(
-            spec, launch, sect, "stores", domain, bidx
-        )
-    alloc_wave = footprint_bytes(spec.accesses, ws.wave, machine.line_bytes)
-    return {
-        "wave_pts": wave_pts,
-        "n_blocks": ws.n_blocks,
-        "has_y": bool(f_y),
-        "has_z": bool(f_z),
-        "v_comp": v_comp,
-        "v_ov_y": v_ov_y,
-        "v_ov_z": v_ov_z,
-        "alloc_y": alloc_y,
-        "alloc_z": alloc_z,
-        "v_store_comp": v_store_comp,
-        "block_store_bytes": block_store_bytes,
-        "alloc_wave": alloc_wave,
-    }
+
+def dram_front_structure(spec: KernelSpec, launch: LaunchConfig,
+                         machine: GPUMachine, domain=None,
+                         block_store_bytes: int | None = None) -> dict:
+    """Wave-model footprint volumes (§4.4) — unions only, no overlaps.
+
+    Everything here is independent of cache *capacities* (shareable across
+    machines differing only in L2 size).  ``block_store_bytes`` optionally
+    injects a precomputed interior-block store footprint (the implicit-set
+    path is property-tested equal to the enumeration oracle used by default).
+    """
+    domain = domain or spec.domain
+    ws, f_wave, f_y, f_z = _wave_layer_boxes(spec, launch, machine)
+    return _front_counts(spec, launch, machine, domain, ws, f_wave, f_y, f_z,
+                         block_store_bytes)
+
+
+def dram_overlap_structure(spec: KernelSpec, launch: LaunchConfig,
+                           machine: GPUMachine, domain=None) -> dict:
+    """Wave ∩ layer overlap counts (§4.4.2) — the expensive intersections,
+    including the triple-overlap correction that keeps the y and z reuse
+    credits disjoint.
+
+    Rebuilds the (cheap) box lists rather than receiving them from the
+    front stage: as engine tasks the two stages run in separate worker
+    processes under separate cache keys, and shipping box lists through
+    cached values would bloat the persistent cache for a construction that
+    is a small fraction of the counting cost.  Single-process callers that
+    want both stages at once should use ``dram_structure``, which builds
+    the boxes once.
+    """
+    _, f_wave, f_y, f_z = _wave_layer_boxes(spec, launch, machine)
+    return _overlap_counts(f_wave, f_y, f_z, machine.sector_bytes)
+
+
+def dram_structure(spec: KernelSpec, launch: LaunchConfig, machine: GPUMachine,
+                   domain=None, block_store_bytes: int | None = None) -> dict:
+    """Full wave-model footprint counts (§4.4): front volumes + overlaps,
+    over one shared wave/layer box construction."""
+    domain = domain or spec.domain
+    ws, f_wave, f_y, f_z = _wave_layer_boxes(spec, launch, machine)
+    struct = _front_counts(spec, launch, machine, domain, ws, f_wave, f_y,
+                           f_z, block_store_bytes)
+    struct.update(_overlap_counts(f_wave, f_y, f_z, machine.sector_bytes))
+    return struct
 
 
 def dram_rates(struct: dict, machine: GPUMachine, capacity: CapacityModel) -> dict:

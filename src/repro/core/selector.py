@@ -70,7 +70,9 @@ class RankingResult(list):
     """``list[RankedConfig]`` (best first) that also carries the engine's
     exploration report: ``.skipped`` records every configuration that could
     not be priced together with its exception reason (nothing is silently
-    swallowed), ``.report`` is the full ``ExplorationReport``."""
+    swallowed), ``.pruned`` every configuration a ``top_k`` search proved
+    out of the top-k from its bound alone, ``.report`` is the full
+    ``ExplorationReport``."""
 
     def __init__(self, ranked=(), report=None):
         super().__init__(ranked)
@@ -81,9 +83,14 @@ class RankingResult(list):
         return self.report.skipped if self.report is not None else []
 
     @property
+    def pruned(self) -> list:
+        return self.report.pruned if self.report is not None else []
+
+    @property
     def cache_stats(self) -> dict:
-        """Invariant-cache hits/misses/entries of the engine sweep that
-        produced this ranking (per-sweep deltas, see DESIGN.md §5)."""
+        """Invariant-cache hits/misses/entries plus pruned/evaluated config
+        counts of the engine sweep that produced this ranking (per-sweep
+        deltas, see DESIGN.md §5)."""
         return self.report.cache_stats if self.report is not None else {}
 
 
@@ -98,6 +105,7 @@ def rank_gpu_configs(
     strict: bool = False,
     engine=None,
     parallel: bool = False,
+    top_k: int | None = None,
 ) -> "RankingResult":
     """Rank configurations by predicted performance, best first.
 
@@ -106,13 +114,17 @@ def rank_gpu_configs(
     error instead of recording the config under ``result.skipped``.  Pass an
     ``engine`` (``repro.core.engine.Explorer``) to share its invariant cache
     across calls, or ``parallel=True`` for a pooled one-off sweep.
+    ``top_k`` runs the tiered bound-then-refine search instead of exhaustive
+    pricing: the result is truncated to the top-k (bitwise identical to the
+    exhaustive head) and bound-eliminated configs land in ``.pruned``.
     """
     from .engine import Explorer
 
     explorer = engine or Explorer(parallel=parallel)
     report = explorer.rank_gpu(
         spec, machine, configs, capacity=capacity,
-        total_threads=total_threads, strict=strict, progress=progress,
+        total_threads=total_threads, strict=strict, top_k=top_k,
+        progress=progress,
     )
     return RankingResult(
         (RankedConfig(r.config, r.estimate) for r in report.entries), report

@@ -31,6 +31,7 @@ import math
 from dataclasses import dataclass, field as dc_field
 from typing import Callable, Iterable, Sequence
 
+from .access import memoize_hash
 from .machines import TPUMachine, TPU_V5E
 
 
@@ -38,6 +39,7 @@ def _roundup(x: int, m: int) -> int:
     return -(-x // m) * m
 
 
+@memoize_hash
 @dataclass(frozen=True)
 class OperandSpec:
     """One Pallas operand: its BlockSpec as seen by the estimator.
@@ -68,6 +70,7 @@ class OperandSpec:
         return math.prod(shape) * self.elem_bytes
 
 
+@memoize_hash
 @dataclass(frozen=True)
 class MatmulShape:
     m: int
@@ -87,6 +90,7 @@ class MatmulShape:
         )
 
 
+@memoize_hash
 @dataclass(frozen=True)
 class PallasKernelSpec:
     """Estimator view of one pallas_call configuration."""
@@ -160,10 +164,14 @@ class PallasEstimate:
         return self.hbm_bytes / self.work if self.work else 0.0
 
 
-def estimate_pallas(spec: PallasKernelSpec, machine: TPUMachine = TPU_V5E) -> PallasEstimate:
-    n_steps = math.prod(spec.grid) if spec.grid else 1
+def hbm_traffic(spec: PallasKernelSpec) -> tuple:
+    """HBM traffic via revisit analysis: ``(hbm_bytes, per_operand detail)``.
 
-    # ---- HBM traffic via revisit analysis ------------------------------
+    Closed-form BlockSpec byte counting — cheap enough that the tiered
+    search (engine §5) uses it, plus the grid overhead, as the sound lower
+    bound on predicted time before running the full estimate.  Factored out
+    of ``estimate_pallas`` so bound and estimate share the exact float ops.
+    """
     hbm_bytes = 0.0
     per_op = {}
     for op in spec.operands:
@@ -174,6 +182,28 @@ def estimate_pallas(spec: PallasKernelSpec, machine: TPUMachine = TPU_V5E) -> Pa
         vol = fetches * op.block_bytes()
         per_op[op.name] = {"fetches": fetches, "bytes": vol, "dma_eff": eff}
         hbm_bytes += vol / max(eff, 1e-6)
+    return hbm_bytes, per_op
+
+
+def pallas_time_floor(spec: PallasKernelSpec,
+                      machine: TPUMachine = TPU_V5E) -> float:
+    """Lower bound on ``estimate_pallas(...).total_time`` from HBM volume
+    and grid overhead alone (no issue model, no VMEM residency).
+
+    Sound by construction: the estimate's total is ``max(compute, hbm_time,
+    vmem_time) + overhead`` with both terms computed by the identical float
+    operations used here, and ``max``/``+`` are monotone in IEEE arithmetic.
+    """
+    n_steps = math.prod(spec.grid) if spec.grid else 1
+    hbm_bytes, _ = hbm_traffic(spec)
+    return hbm_bytes / machine.hbm_bw + n_steps * machine.grid_step_overhead_s
+
+
+def estimate_pallas(spec: PallasKernelSpec, machine: TPUMachine = TPU_V5E) -> PallasEstimate:
+    n_steps = math.prod(spec.grid) if spec.grid else 1
+
+    # ---- HBM traffic via revisit analysis ------------------------------
+    hbm_bytes, per_op = hbm_traffic(spec)
     hbm_time = hbm_bytes / machine.hbm_bw
 
     # ---- VMEM residency (layer condition as feasibility) ---------------
@@ -244,13 +274,18 @@ def select_pallas_config(
     oversubscription — the violated layer condition) are recorded in the
     engine report's ``skipped`` list with their reason; ties break toward
     smaller VMEM footprints.  Pass an ``Explorer`` as ``engine`` to share
-    its cache across calls.
+    its cache across calls.  ``top_k`` runs the engine's bound-then-refine
+    search (HBM-volume time floors prune before full estimates) — the
+    returned head is bitwise identical to exhaustive ranking, but a
+    candidate pruned by its bound lands in ``report.pruned`` without its
+    estimate ever running, so VMEM infeasibility beyond the top-k may go
+    undiagnosed; use an exhaustive ranking to audit the layer condition.
     """
     from .engine import Explorer
 
     candidates = list(candidates)
     explorer = engine or Explorer()
-    report = explorer.rank_pallas(candidates, machine)
+    report = explorer.rank_pallas(candidates, machine, top_k=top_k)
     ranked = [
         RankedPallasConfig(r.config, candidates[r.index][1], r.estimate)
         for r in report.entries

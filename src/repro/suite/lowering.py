@@ -59,6 +59,11 @@ def suite_gpu_configs() -> list[LaunchConfig]:
     return [LaunchConfig(block=b) for b in SUITE_GPU_BLOCKS]
 
 
+# interned generator outputs per shape class (see KernelWorkload); the suite
+# prices thousands of per-layer workloads drawn from a few dozen shapes
+_candidate_memo: dict = {}
+
+
 @dataclass
 class KernelWorkload:
     """One kernel invocation class inside a model's forward pass.
@@ -79,34 +84,54 @@ class KernelWorkload:
 
     # ---- generator coupling -------------------------------------------
     def tpu_candidates(self) -> list | None:
-        """(config, PallasKernelSpec) candidates — shapes tile-padded."""
+        """(config, PallasKernelSpec) candidates — shapes tile-padded.
+
+        Interned per shape class: repeated layers (and repeated models)
+        return the *same* candidate objects, so downstream consumers — the
+        engine's cell-level dedupe, memoized spec hashes, cache probes —
+        compare by identity instead of re-walking equal spec trees.
+        """
         if "tpu" not in self.backends:
             return None
+        key = (self.kind, tuple(sorted(self.params.items())))
+        cands = _candidate_memo.get(key)
+        if cands is not None:
+            return cands
         from repro.kernels import get_generator
 
         p = self.params
         if self.kind == "matmul":
             gen = get_generator("matmul")
-            return list(gen(pad_tile(p["M"]), pad_tile(p["K"]),
-                            pad_tile(p["N"]), elem_bytes=p["elem_bytes"]))
-        if self.kind == "flash_attention":
+            cands = list(gen(pad_tile(p["M"]), pad_tile(p["K"]),
+                             pad_tile(p["N"]), elem_bytes=p["elem_bytes"]))
+        elif self.kind == "flash_attention":
             gen = get_generator("flash_attention")
-            return list(gen(p["B"], p["Hq"], p["Hkv"], p["Sq"], p["Skv"],
-                            p["D"], causal=p["causal"],
-                            elem_bytes=p["elem_bytes"]))
-        raise ValueError(f"no TPU generator for kind {self.kind!r}")
+            cands = list(gen(p["B"], p["Hq"], p["Hkv"], p["Sq"], p["Skv"],
+                             p["D"], causal=p["causal"],
+                             elem_bytes=p["elem_bytes"]))
+        else:
+            raise ValueError(f"no TPU generator for kind {self.kind!r}")
+        _candidate_memo[key] = cands
+        return cands
 
     def gpu_spec(self):
         """Address-expression artifact for the GPU estimator (exact shapes —
-        the GPU model does not require tile divisibility)."""
+        the GPU model does not require tile divisibility).  Interned like
+        ``tpu_candidates``."""
         if "gpu" not in self.backends:
             return None
         if self.kind != "matmul":
             return None  # attention cores lower to GEMM workloads for GPU
-        from repro.core.specs import matmul_naive
-
         p = self.params
-        return matmul_naive(p["M"], p["K"], p["N"], elem_bytes=p["elem_bytes"])
+        key = ("gpu", self.kind, tuple(sorted(self.params.items())))
+        spec = _candidate_memo.get(key)
+        if spec is None:
+            from repro.core.specs import matmul_naive
+
+            spec = matmul_naive(p["M"], p["K"], p["N"],
+                                elem_bytes=p["elem_bytes"])
+            _candidate_memo[key] = spec
+        return spec
 
     # ---- accounting ----------------------------------------------------
     def flops(self) -> float:

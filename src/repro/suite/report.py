@@ -210,8 +210,18 @@ def _price_row(wl, entry, kind) -> WorkloadPricing:
 
 
 def price_plans(plans: dict, machines, *, explorer: Explorer | None = None,
-                gpu_configs=None, strict: bool = False) -> SuiteReport:
-    """Price ``{name: ModelPlan}`` on every machine in one engine sweep."""
+                gpu_configs=None, strict: bool = False,
+                top_k: int | None = None, progress=None) -> SuiteReport:
+    """Price ``{name: ModelPlan}`` on every machine in one engine sweep.
+
+    ``top_k`` switches the sweep to the engine's tiered bound-then-refine
+    search (the suite only consumes each cell's best config, so ``top_k=1``
+    yields identical reports while skipping most structural work on fresh
+    caches); ``progress(done, total)`` observes per-config completion.
+    Pass ``explorer=Explorer(parallel=True, cache_path=...)`` to persist the
+    invariant cache across runs — a warm re-run of the whole suite then
+    skips essentially all structural evaluation.
+    """
     t0 = time.perf_counter()
     explorer = explorer or Explorer(parallel=True)
     gpu_configs = gpu_configs or suite_gpu_configs()
@@ -219,7 +229,8 @@ def price_plans(plans: dict, machines, *, explorer: Explorer | None = None,
         name: plan.engine_workloads(gpu_configs)
         for name, plan in plans.items()
     }
-    report = explorer.explore_plans(engine_plans, machines, strict=strict)
+    report = explorer.explore_plans(engine_plans, machines, strict=strict,
+                                    top_k=top_k, progress=progress)
 
     suite = SuiteReport(cache_stats=dict(report.cache_stats))
     # index entries/skips once: (workload name, machine) -> best entry

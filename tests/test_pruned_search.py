@@ -1,0 +1,308 @@
+"""Tiered pruned exploration tests (DESIGN.md §5).
+
+The load-bearing guarantee: a ``top_k`` search must return a top-k ranking
+*bitwise identical* to exhaustive search — pruning may only ever cut
+configurations whose sound lower bound proves them out of the top-k.  The
+property test hammers that over random kernel specs x machine geometries x
+k.  The persistent invariant cache must be corruption-tolerant: a damaged or
+version-mismatched file silently degrades to a cold cache, never an error.
+"""
+import os
+import pickle
+
+import pytest
+from hypothesis_compat import given, settings, st
+
+from repro.core.access import Access, Field, KernelSpec, LaunchConfig
+from repro.core.engine import Explorer, InvariantCache
+from repro.core.engine.invariants import _MAGIC
+from repro.core.engine.pool import TaskPool, default_workers, run_tasks
+from repro.core.machines import GPUMachine, TPU_V5E
+from repro.core.specs import star_stencil_3d
+
+SMALL = GPUMachine(
+    name="A100/8",
+    n_sms=13,
+    clock_hz=1.41e9,
+    l1_bytes=192 * 1024,
+    l2_bytes=20 * 1024 * 1024 // 8,
+    dram_bw=1400e9 / 8,
+    l2_bw=5000e9 / 8,
+    peak_flops_dp=9.7e12 / 8,
+)
+
+SPEC = star_stencil_3d(r=2, domain=(24, 32, 64))
+
+CONFIGS = [
+    LaunchConfig(block=b, folding=f)
+    for b in [(32, 4, 8), (64, 4, 4), (16, 8, 8), (128, 2, 4), (4, 16, 16),
+              (2, 64, 8), (256, 2, 2), (8, 8, 16), (1, 32, 32), (512, 2, 1)]
+    for f in [(1, 1, 1), (1, 1, 2)]
+]
+
+
+def _estimate_key(est):
+    """Every float the GPU model emits, for bitwise comparison."""
+    return (
+        est.perf_lups, est.limiter, tuple(sorted(est.limiter_rates.items())),
+        est.l1_cycles_per_lup, est.l2_l1_load_per_lup, est.l2_l1_store_per_lup,
+        est.dram_load_per_lup, est.dram_store_per_lup,
+    )
+
+
+def _ranking_key(report):
+    return [(e.config, _estimate_key(e.estimate)) for e in report.entries]
+
+
+# --------------------------------------------------------------------------
+# pruning exactness
+# --------------------------------------------------------------------------
+def _random_spec(draw_offsets, n_fields, elem_bytes, alignment, domain):
+    """A stencil-ish random kernel: identity maps, random tap offsets."""
+    dz = max(max(abs(o[0]) for o in draw_offsets), 1)
+    dy = max(max(abs(o[1]) for o in draw_offsets), 1)
+    dx = max(max(abs(o[2]) for o in draw_offsets), 1)
+    shape = (domain[0] + 2 * dz, domain[1] + 2 * dy, domain[2] + 2 * dx)
+    fields = [
+        Field(f"f{i}", shape, elem_bytes, alignment=alignment)
+        for i in range(n_fields)
+    ]
+    accesses = [
+        Access(fields[i % n_fields],
+               (o[0] + dz, o[1] + dy, o[2] + dx))
+        for i, o in enumerate(draw_offsets)
+    ]
+    dst = Field("dst", shape, elem_bytes)
+    accesses.append(Access(dst, (dz, dy, dx), is_store=True))
+    return KernelSpec("rand", domain, tuple(accesses),
+                      flops_per_point=float(len(draw_offsets)))
+
+
+offsets_st = st.lists(
+    st.tuples(st.integers(-3, 3), st.integers(-3, 3), st.integers(-4, 4)),
+    min_size=1, max_size=6, unique=True,
+)
+machine_st = st.builds(
+    GPUMachine,
+    name=st.just("rand-gpu"),
+    n_sms=st.integers(2, 24),
+    clock_hz=st.sampled_from([1.0e9, 1.41e9]),
+    l1_bytes=st.sampled_from([64 * 1024, 192 * 1024]),
+    l2_bytes=st.sampled_from([256 * 1024, 2 * 1024 * 1024, 20 * 1024 * 1024]),
+    dram_bw=st.sampled_from([100e9, 800e9, 1400e9]),
+    l2_bw=st.sampled_from([400e9, 2500e9, 5000e9]),
+    peak_flops_dp=st.sampled_from([1e12, 9.7e12]),
+    max_threads_per_sm=st.sampled_from([1024, 2048]),
+)
+
+
+@given(
+    offsets=offsets_st,
+    n_fields=st.integers(1, 2),
+    elem_bytes=st.sampled_from([4, 8]),
+    alignment=st.integers(0, 3),
+    domain=st.tuples(st.integers(4, 16), st.integers(4, 24),
+                     st.integers(8, 48)),
+    machine=machine_st,
+    k=st.sampled_from([1, 3, 7]),
+)
+@settings(max_examples=20, deadline=None)
+def test_pruned_topk_equals_exhaustive_on_random_specs(
+        offsets, n_fields, elem_bytes, alignment, domain, machine, k):
+    spec = _random_spec(offsets, n_fields, elem_bytes, alignment, domain)
+    exhaustive = Explorer().rank_gpu(spec, machine, CONFIGS)
+    pruned = Explorer().rank_gpu(spec, machine, CONFIGS, top_k=k)
+    stats = pruned.cache_stats
+    assert stats["evaluated"] + len(pruned.skipped) + stats["pruned"] \
+        == len(CONFIGS)
+    assert _ranking_key(pruned) == _ranking_key(exhaustive)[:k]
+    # pruned configs really are out of the top-k: threshold bookkeeping
+    for p in pruned.pruned:
+        assert p.bound > p.threshold
+
+
+def test_pruned_topk_exact_on_paper_machines():
+    """Deterministic anchor (runs without hypothesis): small A100, full
+    config list, every k — identical head, conservation of configs."""
+    exhaustive = Explorer().rank_gpu(SPEC, SMALL, CONFIGS)
+    for k in (1, 5, len(CONFIGS)):
+        pruned = Explorer().rank_gpu(SPEC, SMALL, CONFIGS, top_k=k)
+        assert _ranking_key(pruned) == _ranking_key(exhaustive)[:k]
+        stats = pruned.cache_stats
+        assert stats["evaluated"] + len(pruned.skipped) + stats["pruned"] \
+            == len(CONFIGS)
+
+
+def test_pruned_search_skips_structural_work():
+    """The point of the tiers: a top-k sweep must evaluate strictly fewer
+    pool tasks than exhaustive (and record the prune in the report)."""
+    exh = Explorer().rank_gpu(SPEC, SMALL, CONFIGS)
+    pr = Explorer().rank_gpu(SPEC, SMALL, CONFIGS, top_k=3)
+    assert pr.cache_stats["pool_tasks"] < exh.cache_stats["pool_tasks"]
+    assert pr.cache_stats["pruned"] > 0
+    assert pr.prune_rate > 0
+
+
+def test_pallas_pruned_topk_equals_exhaustive():
+    from repro.kernels.stencil3d25.generator import candidate_specs
+
+    cands = list(candidate_specs(2, (64, 128, 256), elem_bytes=4))
+    full = Explorer().rank_pallas(cands, TPU_V5E)
+    for k in (1, 3):
+        pruned = Explorer().rank_pallas(cands, TPU_V5E, top_k=k)
+        assert [(e.config, e.estimate.total_time, e.limiter)
+                for e in pruned.entries] == \
+            [(e.config, e.estimate.total_time, e.limiter)
+             for e in full.entries[:k]]
+
+
+def test_pruned_errors_still_recorded_and_strict_raises():
+    empty = SPEC.scale_domain((0, 8, 8))
+    cfg = LaunchConfig(block=(32, 4, 8))
+    report = Explorer().rank_gpu(empty, SMALL, [cfg], top_k=1)
+    assert not report.entries
+    assert len(report.skipped) == 1
+    assert "empty wave" in report.skipped[0].reason
+    with pytest.raises(ValueError, match="empty wave"):
+        Explorer().rank_gpu(empty, SMALL, [cfg], top_k=1, strict=True)
+
+
+# --------------------------------------------------------------------------
+# persistent invariant cache
+# --------------------------------------------------------------------------
+def test_persistent_cache_warm_run_skips_all_structural_work(tmp_path):
+    path = tmp_path / "inv.cache"
+    cold = Explorer(cache_path=str(path)).rank_gpu(SPEC, SMALL, CONFIGS[:8])
+    assert cold.cache_stats["misses"] > 0
+    assert path.exists()
+
+    warm_explorer = Explorer(cache_path=str(path))
+    assert warm_explorer.cache.loaded_entries > 0
+    warm = warm_explorer.rank_gpu(SPEC, SMALL, CONFIGS[:8])
+    assert warm.cache_stats["misses"] == 0
+    assert warm.cache_stats["pool_tasks"] == 0
+    assert _ranking_key(warm) == _ranking_key(cold)
+
+
+def test_persistent_cache_roundtrips_cached_errors(tmp_path):
+    path = tmp_path / "inv.cache"
+    empty = SPEC.scale_domain((0, 8, 8))
+    cfg = LaunchConfig(block=(32, 4, 8))
+    Explorer(cache_path=str(path)).rank_gpu(empty, SMALL, [cfg])
+    warm = Explorer(cache_path=str(path)).rank_gpu(empty, SMALL, [cfg])
+    assert warm.cache_stats["pool_tasks"] == 0
+    assert len(warm.skipped) == 1 and "empty wave" in warm.skipped[0].reason
+
+
+def test_corrupted_cache_file_is_ignored_not_fatal(tmp_path):
+    path = tmp_path / "inv.cache"
+    path.write_bytes(b"\x00garbage not a pickle at all\xff" * 64)
+    cache = InvariantCache(path=str(path))
+    assert cache.loaded_entries == 0
+    report = Explorer(cache=None, cache_path=None).rank_gpu(
+        SPEC, SMALL, CONFIGS[:2])
+    assert report.entries  # engine unaffected
+
+    # truncated-but-valid-prefix corruption: flip bytes mid-file
+    Explorer(cache_path=str(path)).rank_gpu(SPEC, SMALL, CONFIGS[:4])
+    blob = bytearray(path.read_bytes())
+    mid = len(blob) // 2
+    blob[mid:mid + 64] = b"\xff" * 64
+    path.write_bytes(bytes(blob))
+    recovered = InvariantCache(path=str(path))
+    # damaged records are dropped individually (digest mismatch) or the
+    # whole load degrades to empty — never an exception
+    assert 0 <= recovered.loaded_entries
+    warm = Explorer(cache=recovered).rank_gpu(SPEC, SMALL, CONFIGS[:4])
+    assert _ranking_key(warm) == _ranking_key(
+        Explorer().rank_gpu(SPEC, SMALL, CONFIGS[:4]))
+
+
+def test_version_mismatched_cache_file_is_ignored(tmp_path):
+    path = tmp_path / "inv.cache"
+    Explorer(cache_path=str(path)).rank_gpu(SPEC, SMALL, CONFIGS[:2])
+    with open(path, "rb") as f:
+        pickle.load(f)          # header
+        records = pickle.load(f)
+    assert records
+    with open(path, "wb") as f:
+        pickle.dump({"magic": _MAGIC, "version": -1}, f)
+        pickle.dump(records, f)
+    cache = InvariantCache(path=str(path))
+    assert cache.loaded_entries == 0
+
+
+def test_cache_save_is_atomic_and_explicit(tmp_path):
+    path = tmp_path / "nested" / "dir" / "inv.cache"
+    cache = InvariantCache(path=str(path))
+    cache.store(("k", 1), ("ok", 42))
+    assert cache.dirty
+    n = cache.save()
+    assert n == 1 and path.exists() and not cache.dirty
+    again = InvariantCache(path=str(path))
+    assert again.peek(("k", 1)) == ("ok", 42)
+    leftovers = [p for p in path.parent.iterdir() if p.name != path.name]
+    assert not leftovers  # no temp files left behind
+
+
+# --------------------------------------------------------------------------
+# worker pool
+# --------------------------------------------------------------------------
+def test_default_workers_respects_env_cap(monkeypatch):
+    monkeypatch.setenv("REPRO_MAX_WORKERS", "1")
+    assert default_workers() == 1
+    monkeypatch.setenv("REPRO_MAX_WORKERS", "not-a-number")
+    assert default_workers() >= 1  # invalid cap ignored
+    monkeypatch.setenv("REPRO_MAX_WORKERS", "100000")
+    uncapped = default_workers()
+    monkeypatch.delenv("REPRO_MAX_WORKERS")
+    # the env var is a cap, not an override: cannot exceed available CPUs
+    assert uncapped == default_workers()
+
+
+def _square(x):
+    return x * x
+
+
+def _boom(x):
+    raise ValueError(f"boom {x}")
+
+
+def test_batched_pool_preserves_order_and_outcomes():
+    calls = [(_square, (i,)) for i in range(37)]
+    calls[5] = (_boom, (5,))
+    serial = run_tasks(calls, parallel=False)
+    parallel = run_tasks(calls, parallel=True, max_workers=2)
+    assert [s for s, _ in serial] == [s for s, _ in parallel]
+    for (s1, v1), (s2, v2) in zip(serial, parallel):
+        if s1 == "ok":
+            assert v1 == v2
+        else:
+            assert type(v1) is type(v2) and str(v1) == str(v2)
+
+
+def test_task_pool_reusable_across_rounds():
+    with TaskPool(parallel=True, max_workers=2) as pool:
+        for r in range(3):
+            out = pool.run([(_square, (i,)) for i in range(r, r + 8)])
+            assert out == [("ok", i * i) for i in range(r, r + 8)]
+
+
+# --------------------------------------------------------------------------
+# progress wiring
+# --------------------------------------------------------------------------
+def test_progress_reported_through_explore():
+    from repro.core.engine import Workload
+
+    seen = []
+    wl = Workload(name="s", gpu_spec=SPEC, gpu_configs=CONFIGS[:6])
+    Explorer().explore([wl], [SMALL], progress=lambda d, t: seen.append((d, t)))
+    assert seen and seen[-1] == (6, 6)
+    assert [d for d, _ in seen] == sorted(d for d, _ in seen)
+
+
+def test_progress_counts_pruned_configs_too():
+    seen = []
+    Explorer().rank_gpu(SPEC, SMALL, CONFIGS, top_k=2,
+                        progress=lambda d, t: seen.append((d, t)))
+    assert seen[-1] == (len(CONFIGS), len(CONFIGS))
