@@ -1,0 +1,210 @@
+"""Spec-extraction frontend bench (DESIGN §9): trace+lower cost per kernel
+candidate, and traced-vs-handwritten estimate parity.
+
+Parity rows re-state the pre-frontend hand-written specs inline and check
+the traced generator output is bitwise identical (specs and estimator
+fields) — the contract that lets the generators route through the tracer.
+The overhead row measures what tracing costs relative to pricing: one
+trace+lower per candidate vs one ``estimate_pallas`` call (both intra-run,
+so the ratio transfers across runner hardware).
+"""
+from __future__ import annotations
+
+import time
+
+from benchmarks.common import bench_json, emit
+from repro.core.tpu_adapt import (
+    MatmulShape,
+    OperandSpec,
+    PallasKernelSpec,
+    estimate_pallas,
+)
+
+_EST_FIELDS = ("hbm_bytes", "hbm_time", "mxu_time", "vpu_time", "vmem_time",
+               "vmem_alloc_bytes", "grid_overhead", "total_time", "limiter",
+               "feasible", "work")
+
+KERNEL_CASES = {
+    "stencil3d25": lambda: _stencil_cands(),
+    "lbm_d3q15": lambda: _lbm_cands(),
+    "matmul": lambda: _matmul_cands(),
+    "flash_attention": lambda: _flash_cands(),
+    "jacobi2d": lambda: _jacobi_cands(),
+    "transpose_pad": lambda: _transpose_cands(),
+}
+
+
+def _stencil_cands():
+    from repro.kernels.stencil3d25.generator import _candidates
+
+    _candidates.cache_clear()
+    return list(_candidates(4, (512, 512, 640), 8))
+
+
+def _lbm_cands():
+    from repro.kernels.lbm_d3q15.generator import _candidates
+
+    _candidates.cache_clear()
+    return list(_candidates((256, 256, 256), 8))
+
+
+def _matmul_cands():
+    from repro.kernels.matmul.generator import _candidates
+
+    _candidates.cache_clear()
+    return list(_candidates(2048, 2048, 2048, 2))
+
+
+def _flash_cands():
+    from repro.kernels.flash_attention.generator import _candidates
+
+    _candidates.cache_clear()
+    return list(_candidates(2, 8, 2, 2048, 2048, 64, True, 2))
+
+
+def _jacobi_cands():
+    from repro.kernels.jacobi2d.generator import _candidates
+
+    _candidates.cache_clear()
+    return list(_candidates((4096, 4096), 8))
+
+
+def _transpose_cands():
+    from repro.kernels.transpose_pad.generator import _candidates
+
+    _candidates.cache_clear()
+    return list(_candidates(8192, 8192, 4))
+
+
+def _estimates_equal(a: PallasKernelSpec, b: PallasKernelSpec) -> bool:
+    ea, eb = estimate_pallas(a), estimate_pallas(b)
+    return all(getattr(ea, f) == getattr(eb, f) for f in _EST_FIELDS)
+
+
+def _hand_stencil(r, domain, eb):
+    """Pre-frontend hand-written stencil specs (replane + ring)."""
+    Z, Y, X = domain
+    Yp, Xp = Y + 2 * r, X + 2 * r
+    Zp = Z + 2 * r
+    fl = float(6 * r + 1) * 2.0
+    replane = PallasKernelSpec(
+        name=f"star{r}_replane", grid=(Z,),
+        operands=tuple(
+            OperandSpec(f"src_p{k}", (1, Yp, Xp), eb, grid_deps=(0,))
+            for k in range(2 * r + 1)
+        ) + (OperandSpec("dst", (1, Y, X), eb, grid_deps=(0,),
+                         is_output=True),),
+        vpu_elems_per_step=fl * Y * X, vpu_shape=(Y, X),
+        work_per_step=float(Y * X), elem_bytes=eb)
+    ring = PallasKernelSpec(
+        name=f"star{r}_ring", grid=(Zp,),
+        operands=(
+            OperandSpec("src", (1, Yp, Xp), eb, grid_deps=(0,)),
+            OperandSpec("dst", (1, Y, X), eb, grid_deps=(0,),
+                        is_output=True),
+        ),
+        vpu_elems_per_step=fl * Y * X * Z / Zp, vpu_shape=(Y, X),
+        scratch_bytes=(2 * r + 1) * Yp * Xp * eb,
+        work_per_step=float(Y * X) * Z / Zp, elem_bytes=eb)
+    return {"replane": replane, "ring": ring}
+
+
+def _hand_matmul(M, K, N, eb, cands):
+    out = {}
+    for cfg, _ in cands:
+        bm, bk, bn = cfg["bm"], cfg["bk"], cfg["bn"]
+        out[(bm, bk, bn)] = PallasKernelSpec(
+            name=f"mm_{bm}x{bk}x{bn}", grid=(M // bm, N // bn, K // bk),
+            operands=(
+                OperandSpec("a", (bm, bk), eb, grid_deps=(0, 2)),
+                OperandSpec("b", (bk, bn), eb, grid_deps=(1, 2)),
+                OperandSpec("o", (bm, bn), eb, grid_deps=(0, 1),
+                            is_output=True),
+            ),
+            matmuls_per_step=(MatmulShape(bm, bk, bn),),
+            scratch_bytes=bm * bn * 4,
+            work_per_step=2.0 * bm * bk * bn, elem_bytes=eb)
+    return out
+
+
+def main() -> None:
+    # warm jax + pallas imports so per-candidate timings measure tracing,
+    # not one-time module initialization
+    from repro.kernels.matmul.generator import _candidates as _mm_warm
+
+    _mm_warm.cache_clear()
+    _mm_warm(128, 128, 128, 4)
+    _mm_warm.cache_clear()
+
+    payload = {"kernels": {}, "parity": {}, "overhead": {}}
+    all_specs = []
+    for name, loader in KERNEL_CASES.items():
+        t0 = time.perf_counter()
+        cands = loader()          # cold: caches cleared inside
+        dt_us = (time.perf_counter() - t0) * 1e6
+        per_cand = dt_us / max(len(cands), 1)
+        payload["kernels"][name] = {
+            "n_candidates": len(cands),
+            "trace_us_per_cand": per_cand,
+        }
+        emit(f"trace_extract/{name}", per_cand,
+             f"n_cands={len(cands)};total_ms={dt_us / 1e3:.1f}")
+        all_specs.extend(s for _, s in cands
+                         if isinstance(s, PallasKernelSpec))
+
+    # ---- traced-vs-handwritten parity ---------------------------------
+    st_cands = {c["variant"]: s for c, s in _stencil_cands()
+                if c["variant"] in ("replane", "ring")}
+    hand_st = _hand_stencil(4, (512, 512, 640), 8)
+    payload["parity"]["stencil_specs_equal"] = all(
+        st_cands[v] == hand_st[v] for v in hand_st)
+    payload["parity"]["stencil_estimates_equal"] = all(
+        _estimates_equal(st_cands[v], hand_st[v]) for v in hand_st)
+
+    mm_cands = _matmul_cands()
+    hand_mm = _hand_matmul(2048, 2048, 2048, 2, mm_cands)
+    payload["parity"]["matmul_specs_equal"] = all(
+        s == hand_mm[(c["bm"], c["bk"], c["bn"])] for c, s in mm_cands)
+    payload["parity"]["matmul_estimates_equal"] = all(
+        _estimates_equal(s, hand_mm[(c["bm"], c["bk"], c["bn"])])
+        for c, s in mm_cands)
+
+    from repro.core import specs
+    from repro.kernels.jacobi2d.generator import (
+        traced_gpu_spec as jac_gpu)
+    from repro.kernels.matmul.generator import traced_gpu_spec as mm_gpu
+    from repro.kernels.stencil3d25.generator import (
+        traced_gpu_spec as st_gpu)
+
+    payload["parity"]["gpu_star_equal"] = \
+        st_gpu(4, (512, 512, 640), 8) == specs.star_stencil_3d(
+            4, (512, 512, 640), 8)
+    payload["parity"]["gpu_gemm_equal"] = \
+        mm_gpu(2048, 2048, 2048, 2) == specs.matmul_naive(2048, 2048, 2048, 2)
+    payload["parity"]["gpu_jacobi_equal"] = \
+        jac_gpu((4096, 4096), 8, name="stencil2d5pt") == \
+        specs.stencil_2d5pt((4096, 4096), 8)
+    for k, v in payload["parity"].items():
+        emit(f"trace_extract/parity/{k}", 0.0, str(bool(v)))
+
+    # ---- tracing overhead vs pricing ----------------------------------
+    n = len(all_specs)
+    t0 = time.perf_counter()
+    for s in all_specs:
+        estimate_pallas(s)
+    est_us = (time.perf_counter() - t0) * 1e6 / max(n, 1)
+    trace_us = sum(k["trace_us_per_cand"] * k["n_candidates"]
+                   for k in payload["kernels"].values()) / max(n, 1)
+    payload["overhead"] = {
+        "trace_us_per_cand": trace_us,
+        "estimate_us_per_cand": est_us,
+        "ratio": trace_us / max(est_us, 1e-9),
+    }
+    emit("trace_extract/overhead", trace_us,
+         f"estimate_us={est_us:.1f};ratio={payload['overhead']['ratio']:.1f}")
+
+    bench_json("trace_extract", payload)
+
+
+if __name__ == "__main__":
+    main()

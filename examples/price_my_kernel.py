@@ -1,0 +1,69 @@
+"""Price a user-defined Pallas kernel with zero hand-written specs.
+
+The paper's integration claim: the estimator plugs into any code generator
+that can produce the address expressions.  The spec-extraction frontend
+(DESIGN §9) produces them *from the kernel itself* — write a Pallas kernel,
+hand the frontend its builder and shapes, get a cross-machine ranking.
+
+Run:  PYTHONPATH=src python examples/price_my_kernel.py
+"""
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core.machines import A100, TPU_V5E, V100
+from repro.frontend import arg, price_kernel
+
+# ---- a user kernel: fused scale+shift over row blocks --------------------
+Y, X, TY = 4096, 4096, 128
+
+
+def make_scale_shift(scale: float, shift: float):
+    def kernel(x_ref, o_ref):
+        o_ref[...] = x_ref[...] * scale + shift
+
+    def call(x):
+        return pl.pallas_call(
+            kernel,
+            grid=(Y // TY,),
+            in_specs=[pl.BlockSpec((TY, X), lambda j: (j, 0))],
+            out_specs=pl.BlockSpec((TY, X), lambda j: (j, 0)),
+            out_shape=jax.ShapeDtypeStruct((Y, X), jnp.float32),
+            interpret=True,
+        )(x)
+
+    return call
+
+
+# ---- the whole integration: ~10 lines ------------------------------------
+report = price_kernel(
+    make_scale_shift(2.0, 1.0),
+    [arg("x", (Y, X), jnp.float32)],
+    machines=[V100, A100, TPU_V5E],
+    name="scale_shift",
+)
+print(report.comparison_table())
+print(f"\nengine: {report.summary()}")
+
+# the traced artifact is inspectable — address expressions included
+from repro.frontend import lower_tpu, trace_kernel  # noqa: E402
+
+traced = trace_kernel(make_scale_shift(2.0, 1.0),
+                      [arg("x", (Y, X), jnp.float32)],
+                      name="scale_shift", trace_body=True)
+print("\ntraced address expressions:")
+for op in traced.operands:
+    print(f"  {op.name}: block={op.block_shape} index={op.index_exprs} "
+          f"deps={op.grid_deps} out={op.is_output}")
+spec = lower_tpu(traced)
+print(f"traced TPU spec: grid={spec.grid} "
+      f"work/step={spec.work_per_step} vpu/step={spec.vpu_elems_per_step}")
+
+# a traced-only kernel from the repo, selected and validated end to end
+from repro.kernels.jacobi2d.ops import jacobi_ref, jacobi_step  # noqa: E402
+import numpy as np  # noqa: E402
+
+src = jax.random.normal(jax.random.PRNGKey(0), (64, 128))
+out = jacobi_step(src)  # config chosen by the estimator from traced specs
+print(f"\njacobi2d (all specs traced) allclose vs jnp oracle: "
+      f"{np.allclose(np.asarray(out), np.asarray(jacobi_ref(src)), atol=1e-5)}")

@@ -117,10 +117,28 @@ def check_model_suite(gate: Gate, base: dict, cur: dict, slack: float):
                {m: [r[0] for r in v] for m, v in cur["ranking"].items()})
 
 
+def check_trace_extract(gate: Gate, base: dict, cur: dict, slack: float):
+    for name, info in base["kernels"].items():
+        gate.equal(f"trace_extract: {name} candidate count",
+                   info["n_candidates"],
+                   cur["kernels"].get(name, {}).get("n_candidates"))
+    for flag, val in base["parity"].items():
+        gate.equal(f"trace_extract: parity {flag}", bool(val),
+                   bool(cur["parity"].get(flag)))
+    # tracing cost per candidate relative to pricing one spec: intra-run,
+    # but micro-timing noisy — widen the gate 4x so it only catches
+    # complexity regressions (e.g. accidentally quadratic tracing)
+    gate.ratio("trace_extract: trace/estimate overhead ratio",
+               float(base["overhead"]["ratio"]),
+               float(cur["overhead"]["ratio"]),
+               slack * 4.0, higher_is_better=False)
+
+
 CHECKS = {
     "perf_ranking": check_perf_ranking,
     "pruned_search": check_pruned_search,
     "model_suite": check_model_suite,
+    "trace_extract": check_trace_extract,
 }
 
 

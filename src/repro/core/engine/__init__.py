@@ -27,6 +27,7 @@ from .protocol import (
     EvalResult,
     ExplorationReport,
     PrunedConfig,
+    RejectedSpec,
     SkipConfig,
     SkippedConfig,
     Task,
@@ -38,5 +39,5 @@ __all__ = [
     "InvariantCache", "ENGINE_CACHE_VERSION",
     "TaskPool", "run_tasks", "default_workers",
     "Estimator", "EvalResult", "ExplorationReport",
-    "SkipConfig", "SkippedConfig", "PrunedConfig", "Task",
+    "SkipConfig", "SkippedConfig", "PrunedConfig", "RejectedSpec", "Task",
 ]

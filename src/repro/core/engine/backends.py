@@ -56,7 +56,7 @@ from ..perfmodel import (
     dram_rates,
     l1_rates,
 )
-from .protocol import EvalResult, SkipConfig, Task
+from .protocol import EvalResult, RejectedSpec, SkipConfig, Task
 
 # Relative slack applied to the GPU closed-form bounds: the model computes
 # times as 1/(bw / volume) while the bounds compute volume/bw directly, which
@@ -252,14 +252,20 @@ class PallasBackend:
 
     name = "pallas"
 
-    # items are (config_dict, PallasKernelSpec) candidates
+    # items are (config_dict, PallasKernelSpec) candidates; a RejectedSpec
+    # spec (frontend tracing diagnostics) needs no structural work — it
+    # resolves straight to a recorded skip in combine
     def structural_tasks(self, item, machine: TPUMachine) -> list:
         _, spec = item
+        if isinstance(spec, RejectedSpec):
+            return []
         return [Task(("pallas", spec, machine), pallas_task, (spec, machine))]
 
     # ---- tiered bound-then-refine (optional protocol methods) ----------
     def bound_tasks(self, item, machine: TPUMachine) -> list:
         _, spec = item
+        if isinstance(spec, RejectedSpec):
+            return []
         return [Task(("pallas-bound", spec, machine), pallas_bound_task,
                      (spec, machine))]
 
@@ -278,6 +284,8 @@ class PallasBackend:
 
     def combine(self, item, machine: TPUMachine, values: dict) -> tuple:
         config, spec = item
+        if isinstance(spec, RejectedSpec):
+            raise SkipConfig(spec.reason)
         est = values[("pallas", spec, machine)]
         if not est.feasible:
             raise SkipConfig(

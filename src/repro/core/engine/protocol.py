@@ -39,6 +39,17 @@ class SkipConfig(Exception):
     recorded reason (e.g. a violated feasibility constraint)."""
 
 
+@dataclass(frozen=True)
+class RejectedSpec:
+    """Stand-in for a spec a frontend could not produce (e.g. the tracer
+    rejected a non-affine kernel).  Backends turn it into a recorded skip
+    with the stored reason, so rejection diagnostics flow through
+    ``report.skipped`` exactly like violated feasibility constraints."""
+
+    name: str
+    reason: str
+
+
 @dataclass
 class EvalResult:
     """One priced configuration, comparable across backends via ``perf``

@@ -1,0 +1,70 @@
+"""Spec-extraction frontend: trace Pallas kernels into address expressions.
+
+The estimator "can be integrated into any code generator that can generate
+the required address expressions" (paper §6).  This package removes the
+hand-written step: give it a Pallas kernel builder and shape placeholders,
+and it derives the address-expression artifact mechanically —
+
+    from repro.frontend import arg, price_kernel
+
+    report = price_kernel(make_my_kernel(...), [arg("x", (8192, 8192))],
+                          machines=[TPU_V5E], name="my_kernel")
+    print(report.comparison_table())
+
+Layers (DESIGN.md §9): ``affine`` (symbolic quasi-affine IR), ``trace``
+(pallas_call + kernel-body tracing), ``lower`` (PallasKernelSpec / GPU
+KernelSpec emission), ``candidates`` (decision-space sweeps for kernel
+generators).  Importing this package does not import jax; tracing does.
+"""
+from __future__ import annotations
+
+from .affine import AffineExpr, NonAffineError, Sym, affine
+from .candidates import KernelBuild, candidates, grid_space
+from .lower import CostModel, derive_costs, lower_gpu, lower_tpu
+from .trace import Placeholder, TraceError, TracedKernel, arg, trace_kernel
+
+
+def price_kernel(call_fn, args, machines, *, name: str = "kernel",
+                 costs: CostModel | None = None, engine=None,
+                 rename: dict | None = None, top_k: int | None = None):
+    """Trace one kernel and price it on a mix of GPU/TPU machines.
+
+    Traces ``call_fn`` (body included), lowers to every backend a machine in
+    ``machines`` needs, and runs one ``Explorer.explore`` sweep.  If the GPU
+    lowering is rejected while only TPU machines are present the kernel
+    still prices; with GPU machines present the rejection reason lands in
+    ``report.skipped``.
+    """
+    from repro.core.engine import Explorer, Workload
+    from repro.core.machines import GPUMachine
+
+    machines = list(machines) if isinstance(machines, (list, tuple)) \
+        else [machines]
+    traced = trace_kernel(call_fn, args, name=name, trace_body=True)
+    tpu_spec = lower_tpu(traced, costs, name=name)
+    workload = Workload(name=name, tpu_candidates=[({}, tpu_spec)])
+    gpu_reject = None
+    if any(isinstance(m, GPUMachine) for m in machines):
+        try:
+            workload.gpu_spec = lower_gpu(traced, costs, name=name,
+                                          rename=rename)
+        except TraceError as e:
+            gpu_reject = str(e)
+    explorer = engine or Explorer()
+    report = explorer.explore([workload], machines, top_k=top_k)
+    if gpu_reject is not None:
+        # the sweep recorded a generic "no GPU kernel spec defined" skip per
+        # GPU machine; substitute the tracer's actual diagnostic
+        for s in report.skipped:
+            if s.workload == name and s.reason == "no GPU kernel spec defined":
+                s.reason = gpu_reject
+    return report
+
+
+__all__ = [
+    "AffineExpr", "NonAffineError", "Sym", "affine",
+    "KernelBuild", "candidates", "grid_space",
+    "CostModel", "derive_costs", "lower_gpu", "lower_tpu",
+    "Placeholder", "TraceError", "TracedKernel", "arg", "trace_kernel",
+    "price_kernel",
+]

@@ -16,9 +16,11 @@ from typing import Callable
 # name -> module holding candidate_specs; extend when adding a kernel package
 GENERATOR_MODULES = {
     "flash_attention": "repro.kernels.flash_attention.generator",
+    "jacobi2d": "repro.kernels.jacobi2d.generator",
     "lbm_d3q15": "repro.kernels.lbm_d3q15.generator",
     "matmul": "repro.kernels.matmul.generator",
     "stencil3d25": "repro.kernels.stencil3d25.generator",
+    "transpose_pad": "repro.kernels.transpose_pad.generator",
 }
 
 
@@ -51,3 +53,21 @@ def lazy_submodules(pkg_name: str, submodules: tuple) -> tuple:
         return sorted(submodules)
 
     return __getattr__, __dir__
+
+
+def dtype_for(elem_bytes: int):
+    """The jnp dtype a generator's ``elem_bytes`` parameter denotes.
+
+    One shared table for every kernel generator (they trace their builders
+    with shape/dtype placeholders, so the byte size must round-trip through
+    a real dtype).  Unsupported sizes get an actionable error instead of a
+    KeyError from deep inside a cached candidate enumeration.
+    """
+    import jax.numpy as jnp
+
+    table = {1: "int8", 2: "bfloat16", 4: "float32", 8: "float64"}
+    if elem_bytes not in table:
+        raise ValueError(
+            f"unsupported elem_bytes {elem_bytes}; "
+            f"choose from {sorted(table)}")
+    return jnp.dtype(table[elem_bytes])

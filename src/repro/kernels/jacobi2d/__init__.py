@@ -1,0 +1,6 @@
+"""2D 5-point Jacobi kernel package — priced *only* via the spec-extraction
+frontend (no hand-written specs anywhere).  Submodules load lazily so the
+traced decision space can be enumerated without importing jax up front."""
+from repro.kernels import lazy_submodules
+
+__getattr__, __dir__ = lazy_submodules(__name__, ("generator", "kernel", "ops"))

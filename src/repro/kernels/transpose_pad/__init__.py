@@ -1,0 +1,6 @@
+"""Padded tiled-transpose kernel package — priced *only* via the
+spec-extraction frontend.  Submodules load lazily so the traced decision
+space can be enumerated without importing jax up front."""
+from repro.kernels import lazy_submodules
+
+__getattr__, __dir__ = lazy_submodules(__name__, ("generator", "kernel", "ops"))

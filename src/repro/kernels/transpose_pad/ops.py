@@ -1,0 +1,30 @@
+"""Jit'd public API for the traced padded-transpose kernel."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .generator import pad_to_tiles, rank_configs
+from .kernel import make_transpose
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn"))
+def _apply(x, *, bm: int, bn: int):
+    M, N = x.shape
+    Mp, Np = pad_to_tiles(M, bm), pad_to_tiles(N, bn)
+    xp = jnp.pad(x, ((0, Mp - M), (0, Np - N)))
+    out = make_transpose(Mp, Np, bm, bn, x.dtype)(xp)
+    return out[:N, :M]
+
+
+def transpose(x, config: dict | None = None):
+    """Padded tiled transpose; tile shape chosen by the estimator (from
+    purely traced specs) unless pinned via ``config``."""
+    if config is None:
+        ranked = rank_configs(x.shape, elem_bytes=x.dtype.itemsize)
+        if not ranked:
+            raise RuntimeError("no feasible transpose configuration")
+        config = ranked[0].config
+    return _apply(x, bm=config["bm"], bn=config["bn"])

@@ -237,7 +237,8 @@ def test_explore_plans_namespaces_and_shares_cache():
 
 def test_generator_registry():
     assert available_generators() == [
-        "flash_attention", "lbm_d3q15", "matmul", "stencil3d25"]
+        "flash_attention", "jacobi2d", "lbm_d3q15", "matmul",
+        "stencil3d25", "transpose_pad"]
     gen = get_generator("matmul")
     cfg, spec = next(iter(gen(128, 128, 128)))
     assert cfg["bm"] == 128 and spec.grid
