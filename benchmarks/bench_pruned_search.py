@@ -188,6 +188,11 @@ def model_suite() -> dict:
         "models": len(plans),
         "machines": len(MACHINES),
         "n_gpu_configs": len(grid),
+        # cache-metric core counters (DESIGN §10; serial sweep, so the
+        # process-local counts cover every structural task)
+        "core_stats": {k: stats_c.get(k, 0) for k in (
+            "streams_built", "streams_shared", "waves_folded",
+            "wave_fallbacks")},
         "exhaustive_s": t_exh / 1e6,
         "pruned_cold_s": t_cold / 1e6,
         "pruned_warm_s": t_warm / 1e6,

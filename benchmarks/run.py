@@ -14,6 +14,7 @@ MODULES = [
     "bench_l1_cycles",        # fig 12
     "bench_l2_volume",        # figs 13/14/15
     "bench_dram_volume",      # figs 19-22
+    "bench_cachesim_core",    # DESIGN §10 vectorized simulator vs oracle
     "bench_capacity_fit",     # figs 16/17/18
     "bench_layer_condition",  # fig 23 / §5.7
     "bench_perf_ranking",     # figs 24/25 / §5.8

@@ -134,11 +134,34 @@ def check_trace_extract(gate: Gate, base: dict, cur: dict, slack: float):
                slack * 4.0, higher_is_better=False)
 
 
+def check_cachesim_core(gate: Gate, base: dict, cur: dict, slack: float):
+    for name, info in base["cases"].items():
+        cur_i = cur["cases"].get(name, {})
+        gate.equal(f"cachesim_core: {name} volumes equal to oracle",
+                   True, bool(cur_i.get("volumes_equal")))
+        for field in ("dram_load_bytes", "dram_store_bytes", "lups"):
+            gate.equal(f"cachesim_core: {name}.{field}", info[field],
+                       cur_i.get(field))
+    # deterministic counters: stream sharing and wave folding are pure
+    # functions of the case list
+    gate.equal("cachesim_core: folded-wave ratio",
+               float(base["folded_wave_ratio"]),
+               float(cur["folded_wave_ratio"]), tol=1e-9)
+    gate.equal("cachesim_core: streams-shared ratio",
+               float(base["streams_shared_ratio"]),
+               float(cur["streams_shared_ratio"]), tol=1e-9)
+    # vectorized-vs-oracle speedup: intra-run, hardware-portable
+    gate.ratio("cachesim_core: simulator speedup vs oracle",
+               float(base["oracle_speedup"]), float(cur["oracle_speedup"]),
+               slack, higher_is_better=True)
+
+
 CHECKS = {
     "perf_ranking": check_perf_ranking,
     "pruned_search": check_pruned_search,
     "model_suite": check_model_suite,
     "trace_extract": check_trace_extract,
+    "cachesim_core": check_cachesim_core,
 }
 
 

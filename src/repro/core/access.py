@@ -19,6 +19,22 @@ from typing import Sequence
 from .isets import AffineExpr1D, APRange, Box, box_points, map_box
 
 
+def domain_zyx(domain) -> tuple:
+    """Normalize a 1-3D iteration-domain tuple to padded (dz, dy, dx).
+
+    The kernel domain convention is (..., Y, X) with missing leading dims
+    of extent 1; every consumer (grid shapes, thread clipping, wave sets,
+    cache-simulator scheduling) shares this one normalization.
+    """
+    if len(domain) == 3:
+        return (domain[0], domain[1], domain[2])
+    if len(domain) == 2:
+        return (1, domain[0], domain[1])
+    if len(domain) == 1:
+        return (1, 1, domain[0])
+    raise ValueError("domain must be 1-3 dims")
+
+
 def memoize_hash(cls):
     """Cache a frozen dataclass's hash on the instance.
 
@@ -205,14 +221,7 @@ class LaunchConfig:
     def grid_for(self, domain: tuple) -> tuple:
         """Thread-block grid (gx, gy, gz) for domain (z, y, x)."""
         ext = self.block_extent()
-        if len(domain) == 3:
-            dz, dy, dx = domain
-        elif len(domain) == 2:
-            dz, dy, dx = 1, domain[0], domain[1]
-        elif len(domain) == 1:
-            dz, dy, dx = 1, 1, domain[0]
-        else:
-            raise ValueError("domain must be 1-3 dims")
+        dz, dy, dx = domain_zyx(domain)
         gx = -(-dx // ext[0])
         gy = -(-dy // ext[1])
         gz = -(-dz // ext[2])
@@ -227,12 +236,7 @@ class LaunchConfig:
         """
         ex, ey, ez = self.block_extent()
         bx, by, bz = block_idx
-        if len(domain) == 3:
-            dz, dy, dx = domain
-        elif len(domain) == 2:
-            dz, dy, dx = 1, domain[0], domain[1]
-        else:
-            dz, dy, dx = 1, 1, domain[0]
+        dz, dy, dx = domain_zyx(domain)
         x0, x1 = bx * ex, min((bx + 1) * ex, dx) - 1
         y0, y1 = by * ey, min((by + 1) * ey, dy) - 1
         z0, z1 = bz * ez, min((bz + 1) * ez, dz) - 1

@@ -18,6 +18,9 @@ sharing behaviour:
     wave-model cost), same key shape as the front.
   * ``walk``    — L1 grid walk + per-warp sector requests, keyed by the full
     (block, folding) launch (machine-independent: shared across machines).
+    Both walks read the memoized stream table (gridwalk, DESIGN §10), so
+    one address generation per launch serves the whole exact tier — and
+    the cache simulator, when a validation pass prices the same launch.
 
 ``combine`` then applies capacity hit-rates and limiter arithmetic — the
 exact float operations of ``estimate_gpu``, so engine results are bitwise

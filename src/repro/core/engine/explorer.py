@@ -38,6 +38,7 @@ from dataclasses import dataclass, field as dc_field
 from typing import Iterable, Sequence
 
 from ..capacity import CapacityModel
+from ..gridwalk import core_stats_snapshot
 from ..machines import GPUMachine, TPUMachine, TPU_V5E
 from .backends import GPUBackend, PallasBackend
 from .invariants import InvariantCache
@@ -302,6 +303,7 @@ class Explorer:
         strict = self.strict if strict is None else strict
         t0 = time.perf_counter()
         hits0, misses0 = self.cache.hits, self.cache.misses
+        core0 = core_stats_snapshot()
         stats = {"pool_tasks": 0, "bound_evals": 0, "shared_cells": 0}
         # cell-level dedupe: structurally identical cells (equal backend
         # state, items, machine) are priced once and cloned per name — the
@@ -372,6 +374,13 @@ class Explorer:
             "evaluated": sum(len(r.results) for r in runs),
             "pruned": sum(len(r.pruned) for r in runs),
         }
+        # cache-metric core deltas (DESIGN §10).  Process-local: tasks that
+        # ran in pool workers count in the worker, not here, so parallel
+        # sweeps under-report — serial sweeps (and the cachesim benches)
+        # see the full picture.
+        report.cache_stats.update({
+            k: v - core0[k] for k, v in core_stats_snapshot().items()
+        })
         report.wall_time_s = time.perf_counter() - t0
         self.save_cache()
         return report

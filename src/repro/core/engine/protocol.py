@@ -152,7 +152,11 @@ class ExplorationReport:
     swallowed.  ``cache_stats`` carries per-sweep deltas: invariant-cache
     ``hits``/``misses``/``entries``, ``pool_tasks`` (structural tasks
     actually evaluated), ``bound_evals`` (cheap bound-stage evaluations),
-    and ``evaluated``/``pruned`` configuration counts.
+    ``evaluated``/``pruned`` configuration counts, and the cache-metric
+    core counters (DESIGN §10, process-local): ``streams_built`` /
+    ``streams_shared`` stream-table constructions vs memo hits, and
+    ``waves_folded`` / ``wave_fallbacks`` simulator waves served by pure
+    translation vs rebuilt per block.
     """
 
     entries: list = dc_field(default_factory=list)        # list[EvalResult]

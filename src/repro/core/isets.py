@@ -23,6 +23,8 @@ from dataclasses import dataclass
 from functools import reduce
 from typing import Iterable, Sequence
 
+import numpy as np
+
 
 # --------------------------------------------------------------------------
 # Arithmetic progressions
@@ -191,6 +193,78 @@ def count_union(boxes: Sequence[Box]) -> int:
     return _count_union_unit(list(dict.fromkeys(boxes)), {})
 
 
+# --------------------------------------------------------------------------
+# Array fast path for intersections (bitwise-identical counts)
+# --------------------------------------------------------------------------
+# The wave-model overlaps intersect box lists pairwise — O(|a|*|b|) Python
+# ``box_intersect``/``APRange`` object churn dominated cold exact-tier
+# pricing.  For unit-step boxes (every address box the dimension-aligned
+# expressions produce, bar the rare strided image) the same exact integer
+# counts come out of plain (start, end) int64 arrays: pairwise intersection
+# is a broadcast max/min and de-duplication is ``np.unique`` on rows; the
+# few hundred surviving distinct boxes then go through the exact recursive
+# union sweep as before.  Any strided range opts the caller back into the
+# object path — correctness never depends on the fast path.
+
+def _unit_boxes_to_array(boxes: Sequence[Box]):
+    """(n, 2d) int64 array [starts | ends] for unit-step boxes, else None."""
+    if not boxes:
+        return None
+    vals = []
+    for b in boxes:
+        row = []
+        for r in b:
+            if r.step != 1 and r.n > 1:
+                return None
+            row.append(r.start)
+        for r in b:
+            row.append(r.last)
+        vals.append(row)
+    return np.asarray(vals, dtype=np.int64)
+
+
+def _array_to_unit_boxes(arr: np.ndarray) -> list[Box]:
+    d = arr.shape[1] // 2
+    return [
+        tuple(APRange.interval(int(row[k]), int(row[d + k])) for k in range(d))
+        for row in arr
+    ]
+
+
+def _intersect_unit_arrays(a: np.ndarray, b: np.ndarray) -> np.ndarray:
+    """Pairwise-intersection rows of two [starts | ends] arrays (deduped)."""
+    d = a.shape[1] // 2
+    s = np.maximum(a[:, None, :d], b[None, :, :d])
+    e = np.minimum(a[:, None, d:], b[None, :, d:])
+    valid = (s <= e).all(axis=-1).ravel()
+    rows = np.concatenate([s.reshape(-1, d), e.reshape(-1, d)], axis=1)[valid]
+    if not len(rows):
+        return rows
+    return np.unique(rows, axis=0)
+
+
+def count_triple_overlap(a: Sequence[Box], b: Sequence[Box],
+                         c: Sequence[Box]) -> int:
+    """|(∪a) ∩ (∪b) ∩ (∪c)| exactly (the wave ∩ z ∩ y correction)."""
+    if not (a and b and c):
+        return 0
+    aa, ab, ac = (_unit_boxes_to_array(x) for x in (a, b, c))
+    if aa is None or ab is None or ac is None:
+        inter = []
+        for ba in a:
+            for bb in b:
+                ib = box_intersect(ba, bb)
+                if not box_is_empty(ib):
+                    inter.append(ib)
+        return count_intersection_of_unions(inter, list(c)) if inter else 0
+    rows = _intersect_unit_arrays(aa, ab)
+    if len(rows):
+        rows = _intersect_unit_arrays(rows, ac)
+    if not len(rows):
+        return 0
+    return _count_union_unit(_array_to_unit_boxes(rows), {})
+
+
 def _count_union_unit(boxes: list[Box], memo: dict | None = None) -> int:
     if memo is None:
         memo = {}
@@ -228,6 +302,14 @@ def _count_union_unit(boxes: list[Box], memo: dict | None = None) -> int:
 
 def count_intersection_of_unions(a: Sequence[Box], b: Sequence[Box]) -> int:
     """|(∪a) ∩ (∪b)| exactly: intersect pairwise then count union."""
+    if not a or not b:
+        return 0
+    aa, ab = _unit_boxes_to_array(a), _unit_boxes_to_array(b)
+    if aa is not None and ab is not None:
+        rows = _intersect_unit_arrays(aa, ab)
+        if not len(rows):
+            return 0
+        return _count_union_unit(_array_to_unit_boxes(rows), {})
     inter = []
     for ba in a:
         for bb in b:

@@ -17,7 +17,7 @@ from __future__ import annotations
 import math
 from dataclasses import dataclass
 
-from .access import KernelSpec, LaunchConfig
+from .access import KernelSpec, LaunchConfig, domain_zyx
 from .isets import APRange, Box
 
 
@@ -99,12 +99,7 @@ def block_boxes_to_domain_boxes(
 ) -> list[Box]:
     """Map contiguous block-index boxes to clipped domain-point (z,y,x) boxes."""
     ex, ey, ez = launch.block_extent()
-    if len(domain) == 3:
-        dz, dy, dx = domain
-    elif len(domain) == 2:
-        dz, dy, dx = 1, domain[0], domain[1]
-    else:
-        dz, dy, dx = 1, 1, domain[0]
+    dz, dy, dx = domain_zyx(domain)
     out = []
     for bz, by, bx in block_boxes:
         # block boxes from linear ranges are contiguous (step 1)
