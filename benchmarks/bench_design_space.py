@@ -1,0 +1,159 @@
+"""Design-space sweep: 1000+ machine variants in ~the 3-machine wall time.
+
+The paper's §1.1 promises architectural exploration over hypothetical GPUs;
+DESIGN.md §11 factors every machine into a structural *geometry* key and a
+*rate* key so a dense grid of rate variants (cache size x DRAM bandwidth x
+L2 bandwidth around V100/A100/H100) shares all structural pricing with its
+anchor, and the rate/limiter stage runs as one (configs x machines) array
+program per geometry class.
+
+Measured here, cold-cache on the paper's eq.-6 grid:
+
+  * **reference** — today's workflow: one exhaustive ``explore()`` over the
+    three base machines (scalar per-(config, machine) combine);
+  * **batched** — ``design_space_sweep()`` over ``paper_design_grid()``
+    (1032 machines, 3 geometry classes) with ``top_k=10``.
+
+Gated claims: the batched sweep prices 1000+ variants in <= 2x the
+3-machine reference wall time (so machines/second throughput is ~100x+),
+its per-machine top-10 is bitwise identical to fresh per-machine exhaustive
+pricing on a sampled subset, and the per-geometry share counters surface in
+``cache_stats``.  The Pareto frontier ("best machine per workload at each
+bandwidth/capacity budget") rides in the derived output and the JSON.
+"""
+import os
+import random
+
+from repro.core.designspace import (
+    design_space_sweep,
+    paper_design_grid,
+    pareto_frontier,
+    pareto_table,
+)
+from repro.core.engine import Explorer, Workload
+from repro.core.machines import A100, H100, V100
+from repro.core.selector import enumerate_gpu_configs
+from repro.core.specs import star_stencil_3d
+
+from .common import bench_json, emit, timed
+
+TOP_K = 10
+BASES = (V100, A100, H100)
+N_SAMPLED = 4
+WNAME = "stencil3d_r4"
+
+# wall-clock asserts scale down by the same slack knob the check_bench
+# gates use (see bench_pruned_search)
+WALL_SLACK = max(float(os.environ.get("BENCH_GATE_SLACK", "1.0")), 1.0)
+
+
+def _fmt_cfg(c):
+    return f"{c.block}x{c.folding}"
+
+
+def _cell_key(report, machine_name):
+    """Bitwise-comparable image of one machine's ranked cell."""
+    return [
+        (e.config, e.perf, e.limiter, e.estimate)
+        for e in report.ranking(WNAME, machine_name)
+    ]
+
+
+def main():
+    spec = star_stencil_3d(r=4, domain=(48, 96, 128))
+    configs = enumerate_gpu_configs(1024)
+    workload = Workload(name=WNAME, gpu_spec=spec)
+
+    # reference: today's cost — cold exhaustive sweep over the 3 real bases
+    ref, t_ref = timed(
+        Explorer(parallel=True).explore, [workload], list(BASES), configs)
+
+    # batched: cold sweep over the 1000+-variant grid through the machine axis
+    machines = paper_design_grid()
+    report, t_batched = timed(
+        design_space_sweep, [workload], machines, top_k=TOP_K,
+        configs=configs)
+
+    n_machines = len(machines)
+    stats = report.cache_stats
+    geometry_groups = stats.get("geometry_groups", 0)
+    machines_per_s = n_machines / (t_batched / 1e6)
+    ref_rate = len(BASES) / (t_ref / 1e6)
+    throughput_speedup = machines_per_s / ref_rate
+    wall_ratio = t_batched / max(t_ref, 1e-9)
+
+    # bitwise cross-check: a deterministic sample of grid variants, each
+    # re-priced by a fresh per-machine exhaustive (scalar-path) explorer
+    rng = random.Random(0)
+    sampled = [machines[i]
+               for i in sorted(rng.sample(range(n_machines), N_SAMPLED))]
+    identical = True
+    for m in sampled:
+        solo = Explorer(parallel=True).explore([workload], [m], configs)
+        if _cell_key(report, m.name) != _cell_key(solo, m.name)[:TOP_K]:
+            identical = False
+
+    frontiers = pareto_frontier(report, machines)
+    frontier = frontiers.get(WNAME, [])
+
+    emit(
+        "design_space/reference_3mach", t_ref,
+        f"n={len(configs)};machines={len(BASES)};"
+        f"entries={len(ref.entries)};tasks={ref.cache_stats['pool_tasks']}",
+    )
+    emit(
+        "design_space/batched_grid", t_batched,
+        f"machines={n_machines};geometry_groups={geometry_groups};"
+        f"machines_batched={stats.get('machines_batched', 0)};"
+        f"tasks={stats['pool_tasks']};wall_ratio={wall_ratio:.2f};"
+        f"machines_per_s={machines_per_s:.1f};"
+        f"throughput_speedup={throughput_speedup:.1f}x",
+    )
+    emit(
+        "design_space/sampled_identity", 0.0,
+        f"sampled={N_SAMPLED};identical_top{TOP_K}={identical};"
+        f"machines={'|'.join(m.name for m in sampled)}",
+    )
+    emit(
+        "design_space/pareto", 0.0,
+        f"frontier={len(frontier)};"
+        f"best_at_max_bw={frontier[-1].machine if frontier else 'n/a'}",
+    )
+    for line in pareto_table(frontiers).splitlines():
+        print(f"# {line}")
+
+    assert n_machines >= 1000, f"grid too small: {n_machines}"
+    assert identical, \
+        "batched top-10 must be bitwise identical to per-machine exhaustive"
+    assert geometry_groups == len(BASES), (
+        f"expected {len(BASES)} structural classes, got {geometry_groups}"
+    )
+    assert wall_ratio <= 2.0 * WALL_SLACK, (
+        f"batched {n_machines}-machine sweep took {wall_ratio:.2f}x the "
+        f"3-machine reference (> 2x)"
+    )
+
+    bench_json("design_space", {
+        "n_configs": len(configs),
+        "n_machines": n_machines,
+        "geometry_groups": geometry_groups,
+        "machines_batched": stats.get("machines_batched", 0),
+        "geometry_share": stats.get("geometry_share", {}),
+        "reference_s": t_ref / 1e6,
+        "batched_s": t_batched / 1e6,
+        "wall_ratio": wall_ratio,
+        "machines_per_s": machines_per_s,
+        "throughput_speedup": throughput_speedup,
+        "identical_topk_sampled": identical,
+        "sampled_machines": [m.name for m in sampled],
+        "top10_a100": [_fmt_cfg(e.config)
+                       for e in report.ranking(WNAME, A100.name)],
+        "top10_h100": [_fmt_cfg(e.config)
+                       for e in report.ranking(WNAME, H100.name)],
+        "pareto": {w: [p.machine for p in pts]
+                   for w, pts in frontiers.items()},
+    })
+
+
+if __name__ == "__main__":
+    main()

@@ -1,7 +1,8 @@
 """Paper §1.1: "performance comparison of different GPU models, including
 hypothetical GPUs for architectural exploration" — the same kernel + config
-space priced on V100, A100, a hypothetical A100 with doubled L2, and the
-TPU-v5e Pallas path, all through ONE ``Explorer.explore()`` call.
+space priced on V100, A100, a hypothetical A100 with doubled L2, the
+A100-80G full-L2 part, H100, and the TPU-v5e Pallas path, all through ONE
+``Explorer.explore()`` call.
 
 The engine's invariant cache makes the hypothetical-GPU sweep nearly free:
 the doubled-L2 A100 shares every grid walk, footprint box, and wave count
@@ -14,13 +15,14 @@ less wave-inherent reuse.
 import dataclasses
 
 from repro.core.engine import Explorer, Workload
-from repro.core.machines import A100, TPU_V5E, V100
+from repro.core.machines import A100, A100_80G, H100, TPU_V5E, V100
 from repro.core.specs import star_stencil_3d
 
 from .common import emit, timed
 
 A100_BIG_L2 = dataclasses.replace(A100, name="hypothetical-A100-2xL2",
                                   l2_bytes=2 * A100.l2_bytes)
+GPU_MACHINES = (V100, A100, A100_BIG_L2, A100_80G, H100)
 
 
 def main():
@@ -35,12 +37,12 @@ def main():
     )
     explorer = Explorer(parallel=True)
     report, us = timed(
-        explorer.explore, [workload], [V100, A100, A100_BIG_L2, TPU_V5E]
+        explorer.explore, [workload], [*GPU_MACHINES, TPU_V5E]
     )
     attribution = report.limiter_attribution()
     # per-machine rows carry no timing of their own (the whole sweep is one
     # explore() call, reported on the machine_compare/sweep row)
-    for machine in (V100, A100, A100_BIG_L2):
+    for machine in GPU_MACHINES:
         best = report.best("stencil3d25", machine.name)
         limiters = attribution[("stencil3d25", machine.name)]
         lim_str = "|".join(f"{k}:{v}" for k, v in limiters.items())
@@ -81,7 +83,7 @@ def main():
     # populated-report invariant: every (workload, machine) cell produced
     # entries and therefore limiter attribution
     expected = {("stencil3d25", m.name)
-                for m in (V100, A100, A100_BIG_L2, TPU_V5E)}
+                for m in (*GPU_MACHINES, TPU_V5E)}
     assert set(attribution) == expected, attribution.keys()
 
 

@@ -22,6 +22,7 @@ MODULES = [
     "bench_machine_compare",  # §1.1 cross-machine/hypothetical-GPU exploration
     "bench_model_suite",      # DESIGN §8 model zoo -> kernel plans, one sweep
     "bench_pruned_search",    # §5 tiered bound-then-refine + persistent cache
+    "bench_design_space",     # DESIGN §11 geometry-factored machine-axis sweep
     "bench_trace_extract",    # DESIGN §9 spec-extraction frontend parity/cost
     "bench_roofline",         # §Roofline table (reads experiments/dryrun)
 ]

@@ -1,0 +1,65 @@
+"""Design-space sweep: price a dense grid of hypothetical machines at once.
+
+Machines factor into a structural *geometry* and a *rate* key (DESIGN.md
+§11): every structural quantity — footprints, grid walks, waves — depends
+only on the geometry, so the engine prices structure once per geometry
+class and runs the rate/limiter stage as one numpy array program across
+all machines.  This demo:
+
+1. builds a ~170-variant grid around A100 (rate scalings: same geometry)
+   plus H100-class architectural variants (TMA-style 128 B bulk-copy
+   sectors — a *geometry* knob, so those form their own class);
+2. prices one stencil workload on every machine in a single
+   ``machine_axis=True`` sweep, showing the per-geometry share counters;
+3. prints the Pareto frontier: the best machine at each
+   (DRAM bandwidth, L2 capacity) budget.
+
+Run:  PYTHONPATH=src python examples/design_space.py
+"""
+import time
+
+from repro.core.designspace import (
+    design_space_sweep,
+    gpu_rate_grid,
+    h100_class_grid,
+    pareto_frontier,
+    pareto_table,
+)
+from repro.core.engine import Workload
+from repro.core.machines import A100
+from repro.core.selector import enumerate_gpu_configs
+from repro.core.specs import star_stencil_3d
+
+machines = gpu_rate_grid(
+    A100,
+    l2_scales=(0.25, 0.5, 1.0, 2.0),
+    dram_bw_scales=(0.5, 0.75, 1.0, 1.5, 2.0),
+    l2_bw_scales=(0.5, 1.0, 2.0),
+    clock_scales=(1.0,),
+) + [A100] + h100_class_grid()
+print(f"machine grid: {len(machines)} variants, "
+      f"{len({m.geometry for m in machines})} geometry classes")
+
+spec = star_stencil_3d(r=4, domain=(48, 96, 128))
+workload = Workload(name="stencil3d_r4", gpu_spec=spec)
+configs = enumerate_gpu_configs(512)
+
+t0 = time.perf_counter()
+report = design_space_sweep([workload], machines, configs=configs, top_k=3)
+dt = time.perf_counter() - t0
+
+stats = report.cache_stats
+print(f"\npriced {stats['machines_batched']} machines x {len(configs)} "
+      f"configs in {dt:.1f}s ({len(machines) / dt:.0f} machines/s)")
+print(f"geometry groups: {stats['geometry_groups']}; structural tasks "
+      f"evaluated: {stats['pool_tasks']} (shared across each class)")
+for label, n in stats["geometry_share"].items():
+    print(f"  {n:4d} machines share {label}")
+
+print("\nPareto frontier — best machine per (bandwidth, capacity) budget:")
+print(pareto_table(pareto_frontier(report, machines)))
+
+best = max(report.entries, key=lambda e: e.perf)
+print(f"\noverall winner: {best.machine} "
+      f"block={best.config.block} fold={best.config.folding} "
+      f"({best.estimate.perf_lups / 1e9:.1f} GLup/s, limiter={best.limiter})")

@@ -156,9 +156,32 @@ def check_cachesim_core(gate: Gate, base: dict, cur: dict, slack: float):
                slack, higher_is_better=True)
 
 
+def check_design_space(gate: Gate, base: dict, cur: dict, slack: float):
+    gate.equal("design_space: sampled top-10 identical to exhaustive",
+               True, bool(cur["identical_topk_sampled"]))
+    gate.equal("design_space: machine-grid size", base["n_machines"],
+               cur["n_machines"])
+    gate.equal("design_space: structural geometry classes",
+               base["geometry_groups"], cur["geometry_groups"])
+    gate.equal("design_space: geometry-share counters",
+               base["geometry_share"], cur["geometry_share"])
+    for m in ("a100", "h100"):
+        gate.equal(f"design_space: top-10 configs on {m}",
+                   base[f"top10_{m}"], cur[f"top10_{m}"])
+    gate.equal("design_space: Pareto-frontier machines", base["pareto"],
+               cur["pareto"])
+    # machines-priced throughput vs the scalar 3-machine path: intra-run,
+    # hardware-portable — the geometry-factoring claim itself
+    gate.ratio("design_space: machine-axis throughput speedup",
+               float(base["throughput_speedup"]),
+               float(cur["throughput_speedup"]), slack,
+               higher_is_better=True)
+
+
 CHECKS = {
     "perf_ranking": check_perf_ranking,
     "pruned_search": check_pruned_search,
+    "design_space": check_design_space,
     "model_suite": check_model_suite,
     "trace_extract": check_trace_extract,
     "cachesim_core": check_cachesim_core,

@@ -22,7 +22,27 @@ from .engine import (
     SkippedConfig,
     Workload,
 )
-from .machines import A100, TPU_V5E, V100, GPUMachine, TPUMachine
+from .designspace import (
+    ParetoPoint,
+    design_space_sweep,
+    gpu_rate_grid,
+    h100_class_grid,
+    paper_design_grid,
+    pareto_frontier,
+    pareto_table,
+    tpu_rate_grid,
+)
+from .machines import (
+    A100,
+    A100_80G,
+    H100,
+    TPU_V5E,
+    V100,
+    GPUGeometry,
+    GPUMachine,
+    TPUGeometry,
+    TPUMachine,
+)
 from .perfmodel import GPUEstimate, estimate_gpu
 from .selector import (
     RankedConfig,
@@ -47,7 +67,10 @@ __all__ = [
     "Access", "Field", "KernelSpec", "LaunchConfig",
     "CapacityModel", "HitRateFit", "gompertz",
     "Explorer", "ExplorationReport", "EvalResult", "SkippedConfig", "Workload",
-    "A100", "V100", "TPU_V5E", "GPUMachine", "TPUMachine",
+    "A100", "A100_80G", "H100", "V100", "TPU_V5E",
+    "GPUGeometry", "GPUMachine", "TPUGeometry", "TPUMachine",
+    "ParetoPoint", "design_space_sweep", "gpu_rate_grid", "h100_class_grid",
+    "paper_design_grid", "pareto_frontier", "pareto_table", "tpu_rate_grid",
     "GPUEstimate", "estimate_gpu",
     "RankedConfig", "RankingResult", "enumerate_gpu_configs",
     "rank_gpu_configs", "ranking_quality", "select_gpu_config",

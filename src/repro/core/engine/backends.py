@@ -49,7 +49,7 @@ from ..access import KernelSpec, LaunchConfig
 from ..capacity import CapacityModel
 from ..footprint import footprint_bytes
 from ..gridwalk import walk_block_l1_fast, warp_sector_requests_fast
-from ..machines import GPUMachine, TPUMachine
+from ..machines import GPUGeometry, GPUMachine, TPUGeometry, TPUMachine
 from ..perfmodel import (
     L1Parts,
     _interior_block,
@@ -57,6 +57,7 @@ from ..perfmodel import (
     dram_front_structure,
     dram_overlap_structure,
     dram_rates,
+    gpu_rate_matrix,
     l1_rates,
 )
 from .protocol import EvalResult, RejectedSpec, SkipConfig, Task
@@ -97,21 +98,23 @@ def gpu_walk_task(spec: KernelSpec, launch: LaunchConfig, domain: tuple) -> tupl
 
 
 def gpu_wave_front_task(spec: KernelSpec, launch: LaunchConfig,
-                        machine: GPUMachine, domain: tuple) -> dict:
+                        geometry: GPUGeometry, domain: tuple) -> dict:
     """Wave-model footprint volumes (unions only); the interior-block store
     footprint is fed from the implicit-set path (== oracle) instead of
-    re-enumerating."""
+    re-enumerating.  Takes the machine *geometry*, not the machine: the
+    cached value is shared by every rate variant (DESIGN.md §11)."""
     store_bytes = footprint_bytes(
-        spec.stores, _interior_boxes(spec, launch, domain), machine.sector_bytes
+        spec.stores, _interior_boxes(spec, launch, domain),
+        geometry.sector_bytes
     )
-    return dram_front_structure(spec, launch, machine, domain,
+    return dram_front_structure(spec, launch, geometry, domain,
                                 block_store_bytes=store_bytes)
 
 
 def gpu_wave_overlap_task(spec: KernelSpec, launch: LaunchConfig,
-                          machine: GPUMachine, domain: tuple) -> dict:
+                          geometry: GPUGeometry, domain: tuple) -> dict:
     """Wave ∩ layer overlap counts — the expensive wave-model intersections."""
-    return dram_overlap_structure(spec, launch, machine, domain)
+    return dram_overlap_structure(spec, launch, geometry, domain)
 
 
 class GPUBackend:
@@ -127,11 +130,12 @@ class GPUBackend:
 
     def _keys(self, launch: LaunchConfig, machine: GPUMachine) -> tuple:
         """Structural keys (block, front, overlap, walk) — single source of
-        truth for task emission, combine lookup, and tier bounds."""
+        truth for task emission, combine lookup, and tier bounds.  Wave keys
+        carry the machine's ``GPUGeometry`` (never rate-key fields), so all
+        rate variants of one geometry share every entry (DESIGN.md §11)."""
         spec, domain = self.spec, self.domain
         extent = launch.block_extent()
-        geom = (machine.n_sms, machine.max_threads_per_sm,
-                machine.sector_bytes, machine.line_bytes)
+        geom = machine.geometry
         return (
             ("gpu-block", spec, extent, domain),
             ("gpu-wave-front", spec, extent, launch.threads, geom, domain),
@@ -144,12 +148,13 @@ class GPUBackend:
     def structural_tasks(self, launch: LaunchConfig,
                          machine: GPUMachine) -> list:
         spec, domain = self.spec, self.domain
+        geom = machine.geometry
         k_block, k_front, k_overlap, k_walk = self._keys(launch, machine)
         return [
             Task(k_block, gpu_block_task, (spec, launch, domain)),
-            Task(k_front, gpu_wave_front_task, (spec, launch, machine, domain)),
+            Task(k_front, gpu_wave_front_task, (spec, launch, geom, domain)),
             Task(k_overlap, gpu_wave_overlap_task,
-                 (spec, launch, machine, domain)),
+                 (spec, launch, geom, domain)),
             Task(k_walk, gpu_walk_task, (spec, launch, domain)),
         ]
 
@@ -164,12 +169,13 @@ class GPUBackend:
         """Cheapest discriminating signal first: wave front (sound DRAM
         bound) → wave overlaps (exact DRAM) → grid walk (exact L1/L2)."""
         spec, domain = self.spec, self.domain
+        geom = machine.geometry
         _, k_front, k_overlap, k_walk = self._keys(launch, machine)
         return [
             [Task(k_front, gpu_wave_front_task,
-                  (spec, launch, machine, domain))],
+                  (spec, launch, geom, domain))],
             [Task(k_overlap, gpu_wave_overlap_task,
-                  (spec, launch, machine, domain))],
+                  (spec, launch, geom, domain))],
             [Task(k_walk, gpu_walk_task, (spec, launch, domain))],
         ]
 
@@ -236,6 +242,52 @@ class GPUBackend:
     def sort_key(self, result: EvalResult) -> tuple:
         return (-result.perf,)
 
+    # ---- machine-axis batched evaluation (DESIGN.md §11) ----------------
+    def geometry_key(self, machine: GPUMachine) -> GPUGeometry:
+        return machine.geometry
+
+    def machine_axis_tasks(self, launch: LaunchConfig,
+                           machine: GPUMachine) -> list:
+        """Structural work for the whole geometry group — identical to the
+        per-machine task set because the keys are already geometry-pure."""
+        return self.structural_tasks(launch, machine)
+
+    def batch_order(self, items, values_per_item, machines):
+        """Rank every live config on every machine in one array program.
+
+        Returns per-machine index orders into ``items`` (best first, ties
+        toward earlier enumeration — matching the scalar ``(-perf, index)``
+        sort) plus per-machine ``(item_pos, reason)`` skip lists (empty:
+        the GPU combine has no feasibility constraint)."""
+        import numpy as np
+
+        rep = machines[0]
+        parts_list, structs = [], []
+        for launch, values in zip(items, values_per_item):
+            k_block, k_front, k_overlap, k_walk = self._keys(launch, rep)
+            v_comp, v_alloc, v_store = values[k_block]
+            cycles, v_up = values[k_walk]
+            parts_list.append(L1Parts(
+                cycles_per_lup=cycles, v_comp=v_comp, v_up=v_up,
+                v_alloc=v_alloc, v_store=v_store))
+            struct = dict(values[k_front])
+            struct.update(values[k_overlap])
+            structs.append(struct)
+        perf, _ = gpu_rate_matrix(parts_list, structs, items, rep.geometry,
+                                  machines, self.capacity,
+                                  self.spec.flops_per_point)
+        idx = np.arange(len(items))
+        orders = [np.lexsort((idx, -perf[:, m]))
+                  for m in range(len(machines))]
+        return orders, [[] for _ in machines]
+
+    def machine_axis_combine(self, launch: LaunchConfig, machine: GPUMachine,
+                             values: dict) -> tuple:
+        """Scalar entry construction for the selected top-k — the exact
+        ``combine`` arithmetic, so returned estimates are bitwise identical
+        to per-machine pricing by construction."""
+        return self.combine(launch, machine, values)
+
 
 # --------------------------------------------------------------------------
 def pallas_task(spec, machine: TPUMachine):
@@ -248,6 +300,12 @@ def pallas_bound_task(spec, machine: TPUMachine) -> float:
     from ..tpu_adapt import pallas_time_floor
 
     return pallas_time_floor(spec, machine)
+
+
+def pallas_structure_task(spec, geometry: TPUGeometry) -> dict:
+    from ..tpu_adapt import pallas_structure
+
+    return pallas_structure(spec, geometry)
 
 
 class PallasBackend:
@@ -300,3 +358,74 @@ class PallasBackend:
     def sort_key(self, result: EvalResult) -> tuple:
         # predicted time ascending; ties toward smaller VMEM footprints
         return (result.estimate.total_time, result.estimate.vmem_alloc_bytes)
+
+    # ---- machine-axis batched evaluation (DESIGN.md §11) ----------------
+    def geometry_key(self, machine: TPUMachine) -> TPUGeometry:
+        return machine.geometry
+
+    def machine_axis_tasks(self, item, machine: TPUMachine) -> list:
+        _, spec = item
+        if isinstance(spec, RejectedSpec):
+            return []
+        geom = machine.geometry
+        return [Task(("pallas-struct", spec, geom), pallas_structure_task,
+                     (spec, geom))]
+
+    def batch_order(self, items, values_per_item, machines):
+        """Rank every candidate on every machine from the shared structural
+        stage: one ``(candidates x machines)`` rate program, per-machine
+        orders matching the scalar ``(total_time, vmem_alloc, index)`` sort,
+        and VMEM-infeasible / tracer-rejected candidates as per-machine
+        ``(item_pos, reason)`` skips with the scalar path's exact wording."""
+        import numpy as np
+
+        from ..tpu_adapt import pallas_rate_matrix
+
+        geom = machines[0].geometry
+        live_pos, structs = [], []
+        rejected = []  # (pos, reason)
+        for pos, (item, values) in enumerate(zip(items, values_per_item)):
+            _, spec = item
+            if isinstance(spec, RejectedSpec):
+                rejected.append((pos, f"SkipConfig: {spec.reason}"))
+                continue
+            live_pos.append(pos)
+            structs.append(values[("pallas-struct", spec, geom)])
+        if not structs:
+            return ([np.array([], dtype=int) for _ in machines],
+                    [list(rejected) for _ in machines])
+        total, _, feasible = pallas_rate_matrix(structs, machines)
+        vmem_alloc = np.array([s["vmem_alloc"] for s in structs],
+                              dtype=float)
+        idx = np.arange(len(structs))
+        pos_arr = np.array(live_pos)
+        orders, skips = [], []
+        for m, machine in enumerate(machines):
+            order = np.lexsort((idx, vmem_alloc, total[:, m]))
+            orders.append(pos_arr[order[feasible[order, m]]])
+            mskips = list(rejected)
+            for i in np.flatnonzero(~feasible[:, m]):
+                alloc = structs[i]["vmem_alloc"]
+                mskips.append((live_pos[i], (
+                    f"SkipConfig: VMEM layer condition violated: "
+                    f"{alloc} B allocated > {machine.vmem_bytes} B VMEM")))
+            skips.append(mskips)
+        return orders, skips
+
+    def machine_axis_combine(self, item, machine: TPUMachine,
+                             values: dict) -> tuple:
+        """Scalar estimate for the selected top-k entries — the same
+        ``estimate_pallas`` every path runs, so results are bitwise
+        identical to per-machine pricing by construction."""
+        from ..tpu_adapt import estimate_pallas
+
+        config, spec = item
+        if isinstance(spec, RejectedSpec):
+            raise SkipConfig(spec.reason)
+        est = estimate_pallas(spec, machine)
+        if not est.feasible:
+            raise SkipConfig(
+                f"VMEM layer condition violated: {est.vmem_alloc_bytes} B "
+                f"allocated > {machine.vmem_bytes} B VMEM"
+            )
+        return config, est, est.work_rate, est.limiter

@@ -93,6 +93,32 @@ class _Item:
     done: bool = False
 
 
+def _backend_signature(backend):
+    if isinstance(backend, GPUBackend):
+        cap = backend.capacity
+        return ("gpu", backend.spec, backend.domain,
+                tuple(sorted(cap.fits.items())))
+    if isinstance(backend, PallasBackend):
+        return ("pallas",)
+    return None
+
+
+def _items_signature(items):
+    try:
+        # dict configs hash by insertion-ordered items: generators emit a
+        # stable field order, and an order mismatch merely forgoes sharing
+        sig = tuple(
+            (tuple(it[0].items()), it[1])
+            if isinstance(it, tuple) and len(it) == 2
+            and isinstance(it[0], dict) else it
+            for it in items
+        )
+        hash(sig)
+        return sig
+    except TypeError:
+        return None
+
+
 def _cell_signature(backend, items, machine):
     """Value signature of one cell, or None when not signable.
 
@@ -103,28 +129,31 @@ def _cell_signature(backend, items, machine):
     and clones the results.  Unhashable pieces opt the cell out of sharing
     (correct, just slower).
     """
-    if isinstance(backend, GPUBackend):
-        cap = backend.capacity
-        backend_sig = ("gpu", backend.spec, backend.domain,
-                       tuple(sorted(cap.fits.items())))
-    elif isinstance(backend, PallasBackend):
-        backend_sig = ("pallas",)
-    else:
+    backend_sig = _backend_signature(backend)
+    items_sig = _items_signature(items)
+    if backend_sig is None or items_sig is None:
         return None
     try:
-        # dict configs hash by insertion-ordered items: generators emit a
-        # stable field order, and an order mismatch merely forgoes sharing
-        items_sig = tuple(
-            (tuple(it[0].items()), it[1])
-            if isinstance(it, tuple) and len(it) == 2
-            and isinstance(it[0], dict) else it
-            for it in items
-        )
         sig = (backend_sig, items_sig, machine)
         hash(sig)  # probe hashability once; unhashable -> no sharing
         return sig
     except TypeError:
         return None
+
+
+_AXIS_METHODS = ("geometry_key", "machine_axis_tasks", "batch_order",
+                 "machine_axis_combine")
+
+
+class _AxisGroup:
+    """Runs sharing (backend state, items, machine geometry) mid-sweep:
+    structure resolves once, the rate stage runs batched across the
+    machine axis, each run keeps its own (workload, machine) results."""
+
+    def __init__(self, backend, items):
+        self.backend = backend
+        self.items = items
+        self.runs: list = []      # _CellRun per machine column
 
 
 class _CellRun:
@@ -172,15 +201,23 @@ class Explorer:
 
     def __init__(self, *, parallel: bool = False, max_workers: int | None = None,
                  cache: InvariantCache | None = None,
-                 cache_path: str | None = None, strict: bool = False):
+                 cache_path: str | None = None, strict: bool = False,
+                 cache_max_entries: int | None = None,
+                 cache_max_bytes: int | None = None):
         self.parallel = parallel
         self.max_workers = max_workers
         if cache is not None and cache_path is not None:
             raise ValueError("pass either cache or cache_path, not both")
-        if cache_path is not None:
-            cache = InvariantCache(path=cache_path)
-        # explicit None check: an *empty* InvariantCache is falsy (__len__)
-        self.cache = cache if cache is not None else InvariantCache()
+        if cache is not None and (cache_max_entries is not None
+                                  or cache_max_bytes is not None):
+            raise ValueError("cache budgets configure the explorer-owned "
+                             "cache; set them on the InvariantCache you "
+                             "pass instead")
+        if cache is None:
+            cache = InvariantCache(path=cache_path,
+                                   max_entries=cache_max_entries,
+                                   max_bytes=cache_max_bytes)
+        self.cache = cache
         self.strict = strict
 
     # ---- single-cell entry points --------------------------------------
@@ -221,7 +258,7 @@ class Explorer:
     # ---- sweep front-end ----------------------------------------------
     def explore(self, workloads, machines, configs=None, *,
                 strict: bool | None = None, top_k: int | None = None,
-                progress=None) -> ExplorationReport:
+                progress=None, machine_axis: bool = False) -> ExplorationReport:
         """Price every workload on every machine in one call.
 
         ``workloads``: Workload instances (a bare KernelSpec is promoted to a
@@ -231,6 +268,14 @@ class Explorer:
         recorded in ``report.skipped`` rather than silently ignored.
         ``top_k`` enables per-cell pruned search; ``progress(done, total)``
         is called as configurations reach a terminal state.
+
+        ``machine_axis=True`` switches to batched design-space evaluation
+        (DESIGN.md §11): cells sharing (workload structure, machine
+        geometry) price their structure once and run the rate/limiter stage
+        as one (configs x machines) array program, then build the selected
+        per-machine top-k entries through the scalar combine — results are
+        bitwise identical to the per-machine path.  Intended with ``top_k``
+        (full rankings fall back to per-entry scalar assembly).
         """
         workloads = [
             w if isinstance(w, Workload) else Workload(name=w.name, gpu_spec=w)
@@ -263,7 +308,7 @@ class Explorer:
                         (w, m, f"no backend for machine type "
                                f"{type(m).__name__}"))
         report = self._sweep(cells, strict=strict, top_k=top_k,
-                             progress=progress)
+                             progress=progress, machine_axis=machine_axis)
         for w, m, reason in undefined:
             report.skipped.append(
                 SkippedConfig(w.name, m.name, None, reason))
@@ -271,7 +316,8 @@ class Explorer:
 
     def explore_plans(self, plans, machines, *,
                       strict: bool | None = None, top_k: int | None = None,
-                      progress=None) -> ExplorationReport:
+                      progress=None,
+                      machine_axis: bool = False) -> ExplorationReport:
         """Price a batch of named workload plans in ONE sweep.
 
         ``plans``: mapping plan name -> iterable of ``Workload``.  Workload
@@ -287,7 +333,7 @@ class Explorer:
             for w in wls
         ]
         return self.explore(namespaced, machines, strict=strict, top_k=top_k,
-                            progress=progress)
+                            progress=progress, machine_axis=machine_axis)
 
     # ---- persistence ---------------------------------------------------
     def save_cache(self) -> int:
@@ -299,10 +345,12 @@ class Explorer:
 
     # ---- the staged core ----------------------------------------------
     def _sweep(self, cells, *, strict: bool | None = None,
-               top_k: int | None = None, progress=None) -> ExplorationReport:
+               top_k: int | None = None, progress=None,
+               machine_axis: bool = False) -> ExplorationReport:
         strict = self.strict if strict is None else strict
         t0 = time.perf_counter()
         hits0, misses0 = self.cache.hits, self.cache.misses
+        evict0 = self.cache.evictions
         core0 = core_stats_snapshot()
         stats = {"pool_tasks": 0, "bound_evals": 0, "shared_cells": 0}
         # cell-level dedupe: structurally identical cells (equal backend
@@ -332,15 +380,47 @@ class Explorer:
             if progress and n:
                 progress(done_items, total_items)
 
+        # machine-axis grouping (DESIGN.md §11): runs whose backend supports
+        # batched evaluation and whose (backend state, items, machine
+        # geometry) match become columns of one axis group; the rest flow
+        # through the per-machine paths unchanged
+        axis_groups, scalar_runs = [], runs
+        if machine_axis:
+            scalar_runs, by_axis = [], {}
+            for run in runs:
+                key = self._axis_key(run)
+                if key is None:
+                    scalar_runs.append(run)
+                    continue
+                grp = by_axis.get(key)
+                if grp is None:
+                    grp = _AxisGroup(run.backend, run.items)
+                    by_axis[key] = grp
+                    axis_groups.append(grp)
+                run.prune = False      # ranked by the batch, not the tiers
+                grp.runs.append(run)
+            stats["geometry_groups"] = len(axis_groups)
+            stats["machines_batched"] = sum(
+                len(g.runs) for g in axis_groups)
+            share: dict = {}
+            for key, grp in by_axis.items():
+                label = str(key[-1])
+                share[label] = share.get(label, 0) + len(grp.runs)
+            stats["geometry_share"] = share
+
         with TaskPool(parallel=self.parallel,
-                      max_workers=self.max_workers) as pool:
-            exhaustive = [r for r in runs if not r.prune]
-            pruned_runs = [r for r in runs if r.prune]
+                      max_workers=self.max_workers) as pool, \
+                self.cache.hold():
+            exhaustive = [r for r in scalar_runs if not r.prune]
+            pruned_runs = [r for r in scalar_runs if r.prune]
             if exhaustive:
                 self._run_exhaustive(exhaustive, pool, strict, stats,
                                      _advance)
             if pruned_runs:
                 self._run_pruned(pruned_runs, pool, strict, stats, _advance)
+            if axis_groups:
+                self._run_machine_axis(axis_groups, pool, strict, stats,
+                                       _advance)
 
         report = ExplorationReport()
         for wname, run in sources:
@@ -367,6 +447,7 @@ class Explorer:
             "hits": self.cache.hits - hits0,
             "misses": self.cache.misses - misses0,
             "entries": len(self.cache),
+            "evictions": self.cache.evictions - evict0,
             "pool_tasks": stats["pool_tasks"],
             "bound_evals": stats["bound_evals"],
             "cells": len(runs),
@@ -374,6 +455,9 @@ class Explorer:
             "evaluated": sum(len(r.results) for r in runs),
             "pruned": sum(len(r.pruned) for r in runs),
         }
+        for k in ("geometry_groups", "machines_batched", "geometry_share"):
+            if k in stats:
+                report.cache_stats[k] = stats[k]
         # cache-metric core deltas (DESIGN §10).  Process-local: tasks that
         # ran in pool workers count in the worker, not here, so parallel
         # sweeps under-report — serial sweeps (and the cachesim benches)
@@ -550,6 +634,91 @@ class Explorer:
                 else:
                     st.bound = run.backend.tier_bound(
                         st.item, run.machine, st.values)
+
+    # ---- machine-axis batched path (DESIGN.md §11) ----------------------
+    @staticmethod
+    def _axis_key(run):
+        """Grouping key for batched machine-axis evaluation, or None when
+        the run must take a per-machine path (backend without the batched
+        protocol, or unsignable state)."""
+        backend = run.backend
+        if not all(hasattr(backend, m) for m in _AXIS_METHODS):
+            return None
+        backend_sig = _backend_signature(backend)
+        items_sig = _items_signature(run.items)
+        if backend_sig is None or items_sig is None:
+            return None
+        try:
+            gkey = backend.geometry_key(run.machine)
+            key = (backend_sig, items_sig, type(run.machine).__name__, gkey)
+            hash(key)
+            return key
+        except (TypeError, AttributeError):
+            return None
+
+    def _run_machine_axis(self, groups, pool, strict, stats, advance):
+        """Structure once per geometry group, one batched rate program per
+        group, scalar combine only for the selected per-machine entries —
+        so every returned estimate is bitwise identical to the per-machine
+        path by construction."""
+        per_group_tasks = []
+        all_tasks = []
+        for g in groups:
+            rep = g.runs[0].machine
+            tasks_per_item = [g.backend.machine_axis_tasks(it, rep)
+                              for it in g.items]
+            per_group_tasks.append(tasks_per_item)
+            for tl in tasks_per_item:
+                all_tasks.extend(tl)
+        self._resolve_batch(all_tasks, pool, stats)
+        for g, tasks_per_item in zip(groups, per_group_tasks):
+            machines = [r.machine for r in g.runs]
+            live_idx, live_values, item_errs = [], [], []
+            for idx, tl in enumerate(tasks_per_item):
+                values: dict = {}
+                err = self._read_values(tl, values, strict)
+                if err is not None:
+                    item_errs.append((idx, err))
+                else:
+                    live_idx.append(idx)
+                    live_values.append(values)
+            live_items = [g.items[i] for i in live_idx]
+            if live_items:
+                orders, skip_lists = g.backend.batch_order(
+                    live_items, live_values, machines)
+            else:
+                orders = [[] for _ in machines]
+                skip_lists = [[] for _ in machines]
+            for run, order, skiplist in zip(g.runs, orders, skip_lists):
+                for idx, err in item_errs:
+                    self._skip(run, g.items[idx], err)
+                for pos, reason in skiplist:
+                    run.skips.append(SkippedConfig(
+                        run.wname, run.machine.name,
+                        _item_config(live_items[pos]), reason))
+                sel = list(order)
+                if run.top_k is not None:
+                    sel = sel[: run.top_k]
+                for pos in sel:
+                    try:
+                        config, est, perf, limiter = (
+                            g.backend.machine_axis_combine(
+                                live_items[pos], run.machine,
+                                live_values[pos]))
+                    except (SkipConfig, ValueError, RuntimeError) as exc:
+                        if strict and not isinstance(exc, SkipConfig):
+                            raise
+                        run.skips.append(SkippedConfig(
+                            run.wname, run.machine.name,
+                            _item_config(live_items[pos]),
+                            f"{type(exc).__name__}: {exc}"))
+                        continue
+                    run.add_result(EvalResult(
+                        workload=run.wname, machine=run.machine.name,
+                        backend=g.backend.name, index=live_idx[pos],
+                        config=config, estimate=est, perf=perf,
+                        limiter=limiter))
+                advance(len(run.items))
 
 
 def _item_config(item):

@@ -26,6 +26,7 @@ Writes are atomic (temp file + ``os.replace``).
 """
 from __future__ import annotations
 
+import contextlib
 import hashlib
 import io
 import os
@@ -39,7 +40,10 @@ from typing import Hashable
 #   1 — PR 1 task set (gpu-block / gpu-walk / gpu-wave / pallas)
 #   2 — tiered task set (gpu-wave split into front + overlap for the
 #       bound-then-refine search)
-ENGINE_CACHE_VERSION = 2
+#   3 — geometry-factored keys: wave keys/args carry GPUGeometry objects
+#       (not ad-hoc tuples / whole machines) and the machine-axis path adds
+#       the geometry-keyed pallas-struct task (DESIGN.md §11)
+ENGINE_CACHE_VERSION = 3
 
 _MAGIC = b"repro-invariant-cache"
 
@@ -58,9 +62,21 @@ class InvariantCache:
     ``path`` enables persistence: the constructor loads any compatible
     entries found there, and ``save()`` (called by the Explorer after each
     sweep that added entries) atomically rewrites the file.
+
+    ``max_entries``/``max_bytes`` bound memory for unbounded design-space
+    sweeps: above either budget the least-recently-used entries are evicted
+    (disk-loaded entries never probed this process go first), counted in
+    ``evictions``/``evicted_bytes``.  Eviction only costs recomputation —
+    correctness is unaffected.  Byte accounting uses each record's pickled
+    size (measured only when ``max_bytes`` is set; unpicklable outcomes are
+    charged a nominal size).
     """
 
-    def __init__(self, path: str | os.PathLike | None = None):
+    _NOMINAL_RECORD_BYTES = 1024
+
+    def __init__(self, path: str | os.PathLike | None = None, *,
+                 max_entries: int | None = None,
+                 max_bytes: int | None = None):
         self._store: dict = {}
         # entries restored from disk wait here and migrate to ``_store``
         # under the *caller's* key object on first probe: unpickled keys
@@ -70,11 +86,19 @@ class InvariantCache:
         self._loaded: dict = {}
         self.hits = 0
         self.misses = 0
+        self.max_entries = max_entries
+        self.max_bytes = max_bytes
+        self.evictions = 0
+        self.evicted_bytes = 0
+        self._held = 0
+        self._bytes = 0
+        self._sizes: dict = {}      # key -> record bytes (max_bytes only)
         self.path = os.fspath(path) if path is not None else None
         self._dirty = False
         self.loaded_entries = 0
         if self.path:
             self.loaded_entries = self.load()
+            self._evict_over_budget()
 
     def __contains__(self, key: Hashable) -> bool:
         return key in self._store or key in self._loaded
@@ -82,13 +106,70 @@ class InvariantCache:
     def __len__(self) -> int:
         return len(self._store) + len(self._loaded)
 
+    @property
+    def _bounded(self) -> bool:
+        return self.max_entries is not None or self.max_bytes is not None
+
     def _get(self, key: Hashable):
         out = self._store.get(key)
         if out is None and self._loaded:
             out = self._loaded.pop(key, None)
             if out is not None:
                 self._store[key] = out      # re-keyed: one slow probe ever
+        elif out is not None and self._bounded:
+            # LRU bookkeeping (dicts preserve insertion order; re-inserting
+            # moves the entry to the recent end) — only paid under a budget
+            del self._store[key]
+            self._store[key] = out
         return out
+
+    def _record_bytes(self, key: Hashable, outcome) -> int:
+        try:
+            return len(pickle.dumps((key, outcome),
+                                    protocol=pickle.HIGHEST_PROTOCOL))
+        except Exception:
+            return self._NOMINAL_RECORD_BYTES
+
+    @contextlib.contextmanager
+    def hold(self):
+        """Defer eviction while a sweep is in flight.
+
+        The explorer stores task outcomes during resolution and reads them
+        back (``peek``) during result assembly; an eviction in between
+        would drop a value before it is consumed.  Budgets therefore apply
+        *between* sweeps: on exiting the outermost hold, the cache evicts
+        down to budget in one pass.  Nesting-safe.
+        """
+        self._held += 1
+        try:
+            yield self
+        finally:
+            self._held -= 1
+            if self._held == 0:
+                self._evict_over_budget()
+
+    def _evict_over_budget(self) -> None:
+        if not self._bounded or self._held:
+            return
+
+        def over() -> bool:
+            if self.max_entries is not None and len(self) > self.max_entries:
+                return True
+            return self.max_bytes is not None and self._bytes > self.max_bytes
+
+        while over():
+            # disk-loaded entries never probed this process are the coldest;
+            # then the least recently used live entry (insertion-ordered)
+            source = self._loaded if self._loaded else self._store
+            if not source:
+                break
+            key = next(iter(source))
+            del source[key]
+            size = self._sizes.pop(key, 0)
+            self._bytes -= size
+            self.evictions += 1
+            self.evicted_bytes += size
+            self._dirty = True
 
     def lookup(self, key: Hashable):
         """Return the cached outcome pair or None, counting a hit (a task
@@ -112,14 +193,23 @@ class InvariantCache:
     def store(self, key: Hashable, outcome: tuple) -> None:
         self._store[key] = outcome
         self._dirty = True
+        if self._bounded:
+            if self.max_bytes is not None:
+                size = self._record_bytes(key, outcome)
+                self._bytes += size - self._sizes.get(key, 0)
+                self._sizes[key] = size
+            self._evict_over_budget()
 
     def stats(self) -> dict:
         return {"hits": self.hits, "misses": self.misses,
-                "entries": len(self)}
+                "entries": len(self), "evictions": self.evictions,
+                "evicted_bytes": self.evicted_bytes}
 
     def clear(self) -> None:
         self._store.clear()
         self._loaded.clear()
+        self._sizes.clear()
+        self._bytes = 0
         self.hits = self.misses = 0
         self._dirty = True
 
@@ -155,6 +245,10 @@ class InvariantCache:
                 key, outcome = record
                 if key not in self._store and key not in self._loaded:
                     self._loaded[key] = outcome
+                    if self.max_bytes is not None:
+                        size = self._record_bytes(key, outcome)
+                        self._sizes[key] = size
+                        self._bytes += size
                     loaded += 1
             except Exception:
                 continue

@@ -410,3 +410,89 @@ def estimate_gpu(
     l1 = estimate_l1(spec, launch, machine, capacity, domain)
     dram = estimate_dram(spec, launch, machine, capacity, domain)
     return assemble_gpu_estimate(spec, launch, machine, domain, l1, dram)
+
+
+# --------------------------------------------------------------------------
+# Batched machine-axis rate stage (DESIGN.md §11)
+# --------------------------------------------------------------------------
+GPU_LIMITERS = ("L1", "L2", "DRAM", "FP")  # assemble_gpu_estimate dict order
+
+
+def gpu_rate_matrix(parts_list, structs, launches, geometry, machines,
+                    capacity: CapacityModel, flops: float):
+    """Rate/limiter stage as one ``(configs x machines)`` array program.
+
+    ``parts_list``/``structs``/``launches`` are the per-config structural
+    outputs (L1Parts, merged front+overlap dicts, LaunchConfig) of one
+    geometry group; ``machines`` vary only in rate-key fields.  Returns
+    ``(perf, limiter_idx)`` — perf in LUP/s, limiter indices into
+    ``GPU_LIMITERS``.
+
+    Bitwise contract: every float operation mirrors the scalar
+    ``l1_rates`` / ``dram_rates`` / ``assemble_gpu_estimate`` chain in the
+    same order and associativity (IEEE +,-,*,/,min,max vectorize exactly;
+    the only transcendental — the Gompertz hit-rate — goes through
+    ``CapacityModel.hit_rate_matrix``, which reuses the scalar ``math.exp``
+    path per unique input pair).  ``np.argmin`` picks the first minimum,
+    matching ``min(rates, key=rates.get)`` over the insertion order above.
+    The geometry-factoring property test pins column-equality to
+    ``estimate_gpu``.
+    """
+    import numpy as np
+
+    f = lambda xs: np.array(list(xs), dtype=float)  # noqa: E731
+    # --- per-config structural arrays (exact int -> float64 conversions) --
+    pts = f(l.points_per_block() for l in launches)
+    bps = f(occupancy_blocks_per_sm(l, geometry.max_threads_per_sm)
+            for l in launches)
+    cycles = f(p.cycles_per_lup for p in parts_list)
+    v_comp = f(p.v_comp for p in parts_list)
+    v_up = f(p.v_up for p in parts_list)
+    v_alloc = f(p.v_alloc for p in parts_list)
+    v_store = f(p.v_store for p in parts_list)
+    wave_pts = f(s["wave_pts"] for s in structs)
+    v_comp_w = f(s["v_comp"] for s in structs)
+    alloc_y = f(s["alloc_y"] for s in structs)
+    alloc_z = f(s["alloc_z"] for s in structs)
+    v_ov_y = f(s["v_ov_y"] for s in structs)
+    v_ov_z = f(s["v_ov_z"] for s in structs)
+    has_y = np.array([s["has_y"] for s in structs], dtype=bool)
+    has_z = np.array([s["has_z"] for s in structs], dtype=bool)
+    v_store_comp = f(s["v_store_comp"] for s in structs)
+    v_store_up = f(s["block_store_bytes"] * s["n_blocks"] for s in structs)
+    alloc_wave = f(s["alloc_wave"] for s in structs)
+    # --- per-machine rate arrays -----------------------------------------
+    l1_bytes = f(m.l1_bytes for m in machines)
+    l2_bytes = f(m.l2_bytes for m in machines)
+    clock = f(m.clock_hz for m in machines)
+    l2_bw = f(m.l2_bw for m in machines)
+    dram_bw = f(m.dram_bw for m in machines)
+    peak = f(m.peak_flops_dp for m in machines)
+
+    C, M = len(launches), len(machines)
+    # --- L1 stage (l1_rates) ---------------------------------------------
+    r_hit = capacity.hit_rate_matrix("l1_loads", v_alloc * bps, l1_bytes)
+    v_cap = (1.0 - r_hit) * np.maximum(0.0, v_up - v_comp)[:, None]
+    l1_load = (v_comp[:, None] + v_cap) / pts[:, None]
+    l1_store = (v_store / pts)[:, None]
+    # --- DRAM stage (dram_rates) -----------------------------------------
+    r_y = capacity.hit_rate_matrix("l2_over_y", alloc_y, l2_bytes)
+    r_z = capacity.hit_rate_matrix("l2_over_z", alloc_z, l2_bytes)
+    saved_y = np.where(has_y[:, None], r_y * v_ov_y[:, None], 0.0)
+    saved_z = np.where(has_z[:, None], r_z * v_ov_z[:, None], 0.0)
+    r_store = capacity.hit_rate_matrix("l2_store", alloc_wave, l2_bytes)
+    v_store_cap = (1.0 - r_store) * np.maximum(
+        0.0, v_store_up - v_store_comp)[:, None]
+    # partially-written sectors evicted before completion are re-read
+    v_load = v_comp_w[:, None] - saved_y - saved_z + v_store_cap
+    dram_load = v_load / wave_pts[:, None]
+    dram_store = (v_store_comp[:, None] + v_store_cap) / wave_pts[:, None]
+    # --- limiter arithmetic (assemble_gpu_estimate) ----------------------
+    stack = np.stack([
+        np.broadcast_to((geometry.n_sms * clock)[None, :]
+                        / np.maximum(cycles, 1e-12)[:, None], (C, M)),
+        l2_bw[None, :] / np.maximum(l1_load + l1_store, 1e-12),
+        dram_bw[None, :] / np.maximum(dram_load + dram_store, 1e-12),
+        np.broadcast_to((peak / max(flops, 1e-12))[None, :], (C, M)),
+    ])
+    return stack.min(axis=0), stack.argmin(axis=0)

@@ -199,6 +199,99 @@ def pallas_time_floor(spec: PallasKernelSpec,
     return hbm_bytes / machine.hbm_bw + n_steps * machine.grid_step_overhead_s
 
 
+def pallas_structure(spec: PallasKernelSpec, geometry) -> dict:
+    """Geometry-keyed structural stage of the Pallas model (DESIGN.md §11).
+
+    ``geometry`` is a ``TPUGeometry`` (or any object with ``vpu_lanes``,
+    ``sublane_elems``, ``mxu_dim``) — everything here depends on tile
+    paddings and the grid, never on bandwidths, FLOP peaks, or the VMEM
+    *capacity* budget, so all rate variants of one geometry share this
+    computation.  Mirrors ``estimate_pallas``'s float operations exactly
+    (the property tests pin the batched path bitwise-equal to it).
+    """
+    n_steps = math.prod(spec.grid) if spec.grid else 1
+    hbm_bytes, per_op = hbm_traffic(spec)
+    vmem_alloc = spec.scratch_bytes
+    for op in spec.operands:
+        vmem_alloc += op.vmem_block_bytes(geometry) * op.n_buffers
+    mxu_flops = sum(m.padded_flops(geometry, spec.elem_bytes)
+                    for m in spec.matmuls_per_step)
+    vpu_elems = spec.vpu_elems_per_step
+    if spec.vpu_shape and len(spec.vpu_shape) >= 2:
+        sub = geometry.sublane_elems(spec.elem_bytes)
+        pad = (
+            _roundup(spec.vpu_shape[-2], sub)
+            * _roundup(spec.vpu_shape[-1], geometry.vpu_lanes)
+        ) / max(spec.vpu_shape[-2] * spec.vpu_shape[-1], 1)
+        vpu_elems *= pad
+    vmem_touch = sum(op.block_bytes() for op in spec.operands) * n_steps
+    return {
+        "n_steps": n_steps,
+        "hbm_bytes": hbm_bytes,
+        "per_op": per_op,
+        "vmem_alloc": vmem_alloc,
+        "mxu_flops": mxu_flops,
+        "vpu_elems": vpu_elems,
+        "vmem_touch": vmem_touch,
+        "work": spec.work_per_step * n_steps,
+        "elem_bytes": spec.elem_bytes,
+    }
+
+
+PALLAS_LIMITERS = ("MXU", "VPU", "HBM", "VMEM")
+
+
+def pallas_rate_matrix(structs, machines):
+    """Rate stage over ``(candidates x machines)`` (DESIGN.md §11).
+
+    Returns ``(total, limiter_idx, feasible)``: predicted total time,
+    limiter indices into ``PALLAS_LIMITERS``, and the VMEM-residency
+    feasibility mask.  Bitwise contract with ``estimate_pallas``: identical
+    operation order per element; the limiter replicates the scalar path's
+    dict-collapse tie semantics (equal float keys keep the *last* inserted
+    label over the insertion order compute, hbm, vmem — emulated with an
+    argmax over the reversed stack).
+    """
+    import numpy as np
+
+    f = lambda xs: np.array(list(xs), dtype=float)  # noqa: E731
+    n_steps = f(s["n_steps"] for s in structs)
+    hbm_bytes = f(s["hbm_bytes"] for s in structs)
+    mxu_flops = f(s["mxu_flops"] for s in structs)
+    vpu_elems = f(s["vpu_elems"] for s in structs)
+    vmem_touch = f(s["vmem_touch"] for s in structs)
+    vmem_alloc = f(s["vmem_alloc"] for s in structs)
+    bf16 = np.array([s["elem_bytes"] <= 2 for s in structs], dtype=bool)
+
+    hbm_bw = f(m.hbm_bw for m in machines)
+    vmem_bw = f(m.vmem_bw for m in machines)
+    vpu_flops = f(m.vpu_flops for m in machines)
+    vmem_bytes = f(m.vmem_bytes for m in machines)
+    overhead_s = f(m.grid_step_overhead_s for m in machines)
+    peak = np.where(bf16[:, None],
+                    f(m.peak_flops_bf16 for m in machines)[None, :],
+                    f(m.peak_flops_f32 for m in machines)[None, :])
+
+    C, M = len(structs), len(machines)
+    hbm_time = hbm_bytes[:, None] / hbm_bw[None, :]
+    mxu_time = (n_steps * mxu_flops)[:, None] / peak
+    vpu_time = (n_steps * vpu_elems)[:, None] / vpu_flops[None, :]
+    vmem_time = vmem_touch[:, None] / vmem_bw[None, :]
+    compute = mxu_time + vpu_time
+    three = np.stack([compute,
+                      np.broadcast_to(hbm_time, (C, M)),
+                      np.broadcast_to(vmem_time, (C, M))])
+    total = three.max(axis=0) + n_steps[:, None] * overhead_s[None, :]
+    # scalar limiter: {compute: MXU/VPU, hbm: HBM, vmem: VMEM}[max] — among
+    # equal maxima the last-inserted key's label survives the dict collapse
+    last_max = 2 - np.argmax(three[::-1], axis=0)
+    limiter_idx = np.where(
+        last_max == 0, np.where(mxu_time >= vpu_time, 0, 1),
+        np.where(last_max == 1, 2, 3))
+    feasible = vmem_alloc[:, None] <= vmem_bytes[None, :]
+    return total, limiter_idx, feasible
+
+
 def estimate_pallas(spec: PallasKernelSpec, machine: TPUMachine = TPU_V5E) -> PallasEstimate:
     n_steps = math.prod(spec.grid) if spec.grid else 1
 

@@ -1,0 +1,322 @@
+"""Design-space sweep tests (DESIGN.md §11).
+
+The load-bearing guarantees:
+
+  * **geometry factoring** — machines agreeing on geometry (SM count,
+    occupancy limit, sector/line granularity) share every structural cache
+    entry: pricing a rate variant after its anchor evaluates zero new pool
+    tasks;
+  * **batched exactness** — the machine-axis path (one numpy rate program
+    per geometry class, scalar combine only for the selected top-k) returns
+    estimates *bitwise identical* to the unfactored per-(config, machine)
+    scalar path, including the skip list;
+  * **bounded cache** — LRU eviction above an entry/byte budget only ever
+    costs recomputation, never changes answers.
+"""
+import dataclasses
+import pickle
+
+import pytest
+from hypothesis_compat import given, settings, st
+
+from repro.core.access import Access, Field, KernelSpec, LaunchConfig
+from repro.core.designspace import (
+    gpu_rate_grid,
+    h100_class_grid,
+    paper_design_grid,
+    pareto_frontier,
+    tpu_rate_grid,
+)
+from repro.core.engine import Explorer, InvariantCache, Workload
+from repro.core.engine.invariants import _MAGIC, ENGINE_CACHE_VERSION
+from repro.core.machines import TPU_V5E, GPUMachine
+from repro.core.specs import star_stencil_3d
+
+SMALL = GPUMachine(
+    name="A100/8",
+    n_sms=13,
+    clock_hz=1.41e9,
+    l1_bytes=192 * 1024,
+    l2_bytes=20 * 1024 * 1024 // 8,
+    dram_bw=1400e9 / 8,
+    l2_bw=5000e9 / 8,
+    peak_flops_dp=9.7e12 / 8,
+)
+
+SPEC = star_stencil_3d(r=2, domain=(24, 32, 64))
+
+CONFIGS = [
+    LaunchConfig(block=b, folding=f)
+    for b in [(32, 4, 8), (64, 4, 4), (16, 8, 8), (128, 2, 4), (4, 16, 16),
+              (2, 64, 8), (256, 2, 2), (8, 8, 16), (1, 32, 32), (512, 2, 1)]
+    for f in [(1, 1, 1), (1, 1, 2)]
+]
+
+
+def _estimate_key(est):
+    """Every float the GPU model emits, for bitwise comparison."""
+    return (
+        est.perf_lups, est.limiter, tuple(sorted(est.limiter_rates.items())),
+        est.l1_cycles_per_lup, est.l2_l1_load_per_lup, est.l2_l1_store_per_lup,
+        est.dram_load_per_lup, est.dram_store_per_lup,
+    )
+
+
+def _cell_key(report, machine_name):
+    return [(e.config, _estimate_key(e.estimate))
+            for e in report.ranking(machine=machine_name)]
+
+
+def _skip_key(report, machine_name):
+    return sorted((repr(s.config), s.reason)
+                  for s in report.skipped_for(machine=machine_name))
+
+
+def _random_spec(draw_offsets, n_fields, elem_bytes, domain):
+    dz = max(max(abs(o[0]) for o in draw_offsets), 1)
+    dy = max(max(abs(o[1]) for o in draw_offsets), 1)
+    dx = max(max(abs(o[2]) for o in draw_offsets), 1)
+    shape = (domain[0] + 2 * dz, domain[1] + 2 * dy, domain[2] + 2 * dx)
+    fields = [
+        Field(f"f{i}", shape, elem_bytes) for i in range(n_fields)
+    ]
+    accesses = [
+        Access(fields[i % n_fields], (o[0] + dz, o[1] + dy, o[2] + dx))
+        for i, o in enumerate(draw_offsets)
+    ]
+    dst = Field("dst", shape, elem_bytes)
+    accesses.append(Access(dst, (dz, dy, dx), is_store=True))
+    return KernelSpec("rand", domain, tuple(accesses),
+                      flops_per_point=float(len(draw_offsets)))
+
+
+offsets_st = st.lists(
+    st.tuples(st.integers(-2, 2), st.integers(-2, 2), st.integers(-3, 3)),
+    min_size=1, max_size=5, unique=True,
+)
+machine_st = st.builds(
+    GPUMachine,
+    name=st.just("rand-gpu"),
+    n_sms=st.integers(2, 24),
+    clock_hz=st.sampled_from([1.0e9, 1.41e9]),
+    l1_bytes=st.sampled_from([64 * 1024, 192 * 1024]),
+    l2_bytes=st.sampled_from([256 * 1024, 2 * 1024 * 1024]),
+    dram_bw=st.sampled_from([100e9, 800e9]),
+    l2_bw=st.sampled_from([400e9, 2500e9]),
+    peak_flops_dp=st.sampled_from([1e12, 9.7e12]),
+    max_threads_per_sm=st.sampled_from([1024, 2048]),
+)
+rate_scales_st = st.tuples(
+    st.sampled_from([0.25, 0.5, 2.0, 4.0]),     # l2 capacity
+    st.sampled_from([0.5, 1.0, 2.0]),           # dram bw
+    st.sampled_from([0.5, 1.0, 2.0]),           # l2 bw
+)
+
+
+# --------------------------------------------------------------------------
+# geometry factoring + batched-path exactness
+# --------------------------------------------------------------------------
+@given(
+    offsets=offsets_st,
+    n_fields=st.integers(1, 2),
+    elem_bytes=st.sampled_from([4, 8]),
+    domain=st.tuples(st.integers(4, 12), st.integers(4, 16),
+                     st.integers(8, 32)),
+    machine=machine_st,
+    scales=rate_scales_st,
+)
+@settings(max_examples=15, deadline=None)
+def test_geometry_sharing_and_batched_parity_on_random_specs(
+        offsets, n_fields, elem_bytes, domain, machine, scales):
+    spec = _random_spec(offsets, n_fields, elem_bytes, domain)
+    l2s, drams, l2bws = scales
+    variant = dataclasses.replace(
+        machine, name="rand-gpu-variant",
+        l2_bytes=max(1, int(machine.l2_bytes * l2s)),
+        dram_bw=machine.dram_bw * drams, l2_bw=machine.l2_bw * l2bws)
+    assert machine.geometry == variant.geometry
+    assert machine.rate_key != variant.rate_key
+
+    # structural sharing: the variant re-priced through the same cache
+    # evaluates zero new structural tasks
+    ex = Explorer()
+    ex.rank_gpu(spec, machine, CONFIGS[:10])
+    r2 = ex.rank_gpu(spec, variant, CONFIGS[:10])
+    assert r2.cache_stats["pool_tasks"] == 0
+
+    # batched machine-axis sweep vs the unfactored scalar path: every
+    # estimate field and every skip reason bitwise equal
+    wl = Workload(name="rand", gpu_spec=spec)
+    scalar = Explorer().explore([wl], [machine, variant], CONFIGS[:10])
+    batched = Explorer().explore([wl], [machine, variant], CONFIGS[:10],
+                                 machine_axis=True)
+    assert batched.cache_stats["geometry_groups"] == 1
+    assert batched.cache_stats["machines_batched"] == 2
+    for m in (machine, variant):
+        assert _cell_key(batched, m.name) == _cell_key(scalar, m.name)
+        assert _skip_key(batched, m.name) == _skip_key(scalar, m.name)
+
+
+def test_machine_axis_topk_matches_scalar_on_paper_machines():
+    variants = gpu_rate_grid(SMALL, l2_scales=(0.5, 1.0, 2.0),
+                             dram_bw_scales=(0.5, 2.0))
+    wl = Workload(name="stencil", gpu_spec=SPEC)
+    scalar = Explorer().explore([wl], variants, CONFIGS, top_k=5)
+    batched = Explorer().explore([wl], variants, CONFIGS, top_k=5,
+                                 machine_axis=True)
+    assert batched.cache_stats["geometry_groups"] == 1
+    assert batched.cache_stats["machines_batched"] == len(variants)
+    for m in variants:
+        assert _cell_key(batched, m.name) == _cell_key(scalar, m.name)
+
+
+def test_machine_axis_pallas_parity_including_infeasible_skips():
+    from repro.kernels.stencil3d25.generator import candidate_specs
+
+    cands = list(candidate_specs(2, (64, 128, 256), elem_bytes=4))
+    # small-VMEM variants force infeasible candidates through the batched
+    # skip path; the reasons must match the scalar path verbatim
+    machines = [TPU_V5E] + tpu_rate_grid(
+        TPU_V5E, hbm_bw_scales=(0.5, 1.0),
+        vmem_scales=(0.004, 0.02, 1.0), flops_scales=(1.0,))
+    wl = Workload(name="st25", tpu_candidates=cands)
+    scalar = Explorer().explore([wl], machines, top_k=3)
+    batched = Explorer().explore([wl], machines, top_k=3, machine_axis=True)
+    skips_seen = 0
+    for m in machines:
+        assert [(e.config, e.estimate, e.limiter)
+                for e in batched.ranking(machine=m.name)] == \
+            [(e.config, e.estimate, e.limiter)
+             for e in scalar.ranking(machine=m.name)]
+        assert _skip_key(batched, m.name) == _skip_key(scalar, m.name)
+        skips_seen += len(batched.skipped_for(machine=m.name))
+    assert skips_seen > 0, "small-VMEM variants must exercise skip parity"
+
+
+def test_mixed_geometry_grid_groups_by_class():
+    machines = h100_class_grid(dram_bw_scales=(1.0,))
+    geoms = {m.geometry for m in machines}
+    assert len(geoms) == 2        # sector 32 vs TMA-style 128
+    wl = Workload(name="stencil", gpu_spec=SPEC)
+    batched = Explorer().explore([wl], machines, CONFIGS[:6], top_k=2,
+                                 machine_axis=True)
+    assert batched.cache_stats["geometry_groups"] == 2
+    share = batched.cache_stats["geometry_share"]
+    assert sorted(share.values()) == [2, 2]
+    scalar = Explorer().explore([wl], machines, CONFIGS[:6])
+    for m in machines:
+        assert _cell_key(batched, m.name) == _cell_key(scalar, m.name)[:2]
+
+
+# --------------------------------------------------------------------------
+# machine grids + Pareto report
+# --------------------------------------------------------------------------
+def test_paper_design_grid_shape():
+    machines = paper_design_grid()
+    assert len(machines) >= 1000
+    assert len({m.name for m in machines}) == len(machines)
+    assert len({m.geometry for m in machines}) == 3
+
+
+def test_pareto_frontier_excludes_dominated_and_collapses_ties():
+    variants = gpu_rate_grid(SMALL, l2_scales=(0.5, 1.0),
+                             dram_bw_scales=(0.5, 1.0),
+                             l2_bw_scales=(1.0, 2.0))
+    wl = Workload(name="stencil", gpu_spec=SPEC)
+    report = Explorer().explore([wl], variants, CONFIGS, top_k=1,
+                                machine_axis=True)
+    frontiers = pareto_frontier(report, variants)
+    frontier = frontiers["stencil"]
+    assert frontier
+    by_name = {m.name: m for m in variants}
+    best = {e.machine: e.perf for e in report.entries}
+    for p in frontier:
+        # no other machine dominates a frontier point
+        for name, perf in best.items():
+            q = by_name[name]
+            if (q.dram_bw <= p.bandwidth and q.l2_bytes <= p.capacity
+                    and perf >= p.perf
+                    and (q.dram_bw < p.bandwidth or q.l2_bytes < p.capacity
+                         or perf > p.perf)):
+                pytest.fail(f"{p.machine} dominated by {name}")
+    # ties collapsed: budgets+perf unique along the frontier
+    keys = [(p.bandwidth, p.capacity, p.perf) for p in frontier]
+    assert len(keys) == len(set(keys))
+    # the full-budget machine is never dominated, so some point must match
+    # its best perf
+    top = max(best.values())
+    assert any(p.perf == top for p in frontier)
+
+
+# --------------------------------------------------------------------------
+# bounded invariant cache (LRU eviction)
+# --------------------------------------------------------------------------
+def test_lru_max_entries_bounds_cache_and_preserves_answers():
+    unbounded = Explorer().rank_gpu(SPEC, SMALL, CONFIGS)
+    ex = Explorer(cache_max_entries=16)
+    bounded = ex.rank_gpu(SPEC, SMALL, CONFIGS)
+    assert len(ex.cache) <= 16
+    assert ex.cache.evictions > 0
+    assert ex.cache.stats()["evictions"] == ex.cache.evictions
+    assert bounded.cache_stats["evictions"] > 0
+    assert [(e.config, _estimate_key(e.estimate)) for e in bounded.entries] \
+        == [(e.config, _estimate_key(e.estimate)) for e in unbounded.entries]
+
+
+def test_lru_max_bytes_bounds_cache_and_counts_evicted_bytes():
+    ex = Explorer(cache_max_bytes=64 * 1024)
+    report = ex.rank_gpu(SPEC, SMALL, CONFIGS)
+    assert ex.cache._bytes <= 64 * 1024
+    assert ex.cache.evictions > 0
+    assert ex.cache.evicted_bytes > 0
+    assert report.entries
+
+
+def test_lru_recency_keeps_hot_entries():
+    cache = InvariantCache(max_entries=2)
+    cache.store("a", ("ok", 1))
+    cache.store("b", ("ok", 2))
+    assert cache.lookup("a") == ("ok", 1)   # touch: "b" is now LRU
+    cache.store("c", ("ok", 3))
+    assert cache.evictions == 1
+    assert cache.peek("a") is not None
+    assert cache.peek("b") is None
+
+
+def test_explorer_rejects_budget_with_explicit_cache():
+    with pytest.raises(ValueError):
+        Explorer(cache=InvariantCache(), cache_max_entries=4)
+
+
+def test_bounded_persistent_cache_evicts_loaded_entries_first(tmp_path):
+    path = tmp_path / "inv.cache"
+    Explorer(cache_path=str(path)).rank_gpu(SPEC, SMALL, CONFIGS)
+    n_saved = len(InvariantCache(path=str(path)))
+    assert n_saved > 8
+    bounded = InvariantCache(path=str(path), max_entries=8)
+    assert len(bounded) <= 8
+    assert bounded.evictions == n_saved - len(bounded)
+
+
+def test_version_mismatched_cache_degrades_to_cold(tmp_path):
+    import io
+
+    path = tmp_path / "inv.cache"
+    ex = Explorer(cache_path=str(path))
+    ex.rank_gpu(SPEC, SMALL, CONFIGS[:4])
+    # rewrite the header with a future engine version, keeping the payload
+    with open(path, "rb") as f:
+        pickle.load(f)
+        pickle.load(f)
+        payload = f.read()
+    buf = io.BytesIO()
+    pickle.dump({"magic": _MAGIC, "version": ENGINE_CACHE_VERSION + 1}, buf)
+    pickle.dump(b"\x00" * 32, buf)
+    buf.write(payload)
+    path.write_bytes(buf.getvalue())
+
+    warm_ex = Explorer(cache_path=str(path))
+    assert warm_ex.cache.loaded_entries == 0      # graceful: cold, no raise
+    warm = warm_ex.rank_gpu(SPEC, SMALL, CONFIGS[:4])
+    assert warm.cache_stats["pool_tasks"] > 0
+    assert warm.entries
