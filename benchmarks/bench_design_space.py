@@ -24,6 +24,7 @@ bandwidth/capacity budget") rides in the derived output and the JSON.
 import os
 import random
 
+from repro.api import PriceRequest, price
 from repro.core.designspace import (
     design_space_sweep,
     paper_design_grid,
@@ -65,8 +66,10 @@ def main():
     workload = Workload(name=WNAME, gpu_spec=spec)
 
     # reference: today's cost — cold exhaustive sweep over the 3 real bases
-    ref, t_ref = timed(
-        Explorer(parallel=True).explore, [workload], list(BASES), configs)
+    ref, t_ref = timed(lambda: price(
+        PriceRequest(workloads=[workload], machines=list(BASES),
+                     gpu_configs=configs),
+        engine=Explorer(parallel=True)).report)
 
     # batched: cold sweep over the 1000+-variant grid through the machine axis
     machines = paper_design_grid()
@@ -89,7 +92,10 @@ def main():
                for i in sorted(rng.sample(range(n_machines), N_SAMPLED))]
     identical = True
     for m in sampled:
-        solo = Explorer(parallel=True).explore([workload], [m], configs)
+        solo = price(
+            PriceRequest(workloads=[workload], machines=[m],
+                         gpu_configs=configs),
+            engine=Explorer(parallel=True)).report
         if _cell_key(report, m.name) != _cell_key(solo, m.name)[:TOP_K]:
             identical = False
 

@@ -2,7 +2,7 @@
 hypothetical GPUs for architectural exploration" — the same kernel + config
 space priced on V100, A100, a hypothetical A100 with doubled L2, the
 A100-80G full-L2 part, H100, and the TPU-v5e Pallas path, all through ONE
-``Explorer.explore()`` call.
+``repro.api.price()`` sweep.
 
 The engine's invariant cache makes the hypothetical-GPU sweep nearly free:
 the doubled-L2 A100 shares every grid walk, footprint box, and wave count
@@ -14,6 +14,7 @@ less wave-inherent reuse.
 """
 import dataclasses
 
+from repro.api import PriceRequest, price
 from repro.core.engine import Explorer, Workload
 from repro.core.machines import A100, A100_80G, H100, TPU_V5E, V100
 from repro.core.specs import star_stencil_3d
@@ -36,9 +37,10 @@ def main():
         tpu_candidates=list(st_cands(4, domain, elem_bytes=8)),
     )
     explorer = Explorer(parallel=True)
-    report, us = timed(
-        explorer.explore, [workload], [*GPU_MACHINES, TPU_V5E]
-    )
+    report, us = timed(lambda: price(
+        PriceRequest(workloads=[workload],
+                     machines=[*GPU_MACHINES, TPU_V5E]),
+        engine=explorer).report)
     attribution = report.limiter_attribution()
     # per-machine rows carry no timing of their own (the whole sweep is one
     # explore() call, reported on the machine_compare/sweep row)

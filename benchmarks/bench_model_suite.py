@@ -4,7 +4,7 @@ priced across machines in ONE exploration-engine sweep (DESIGN.md §8).
 Every ``repro.configs`` architecture — dense, GQA, MoE (routing fan-out),
 RWKV/Mamba scan equivalents, encoder-decoder, VLM — is decomposed by
 ``repro.suite`` into per-layer kernel workloads and priced on V100, A100,
-and TPU-v5e through a single ``Explorer.explore_plans`` call.  Layers that
+and TPU-v5e through a single ``repro.api.price`` sweep.  Layers that
 share shapes share structural tasks, so the invariant-cache hit rate is the
 headline number: pricing a 60-layer model costs a handful of distinct
 structural evaluations.
@@ -12,9 +12,10 @@ structural evaluations.
 Asserts the suite covers >= 8 models x >= 3 machines with every TPU cell
 complete, and that the structural memo absorbs > 50% of task lookups.
 """
+from repro.api import plan_request, price
 from repro.core.engine import Explorer
 from repro.core.machines import A100, TPU_V5E, V100
-from repro.suite import lower_all, price_plans
+from repro.suite import lower_all
 
 from .common import bench_json, emit, invariant_cache_path
 
@@ -36,7 +37,7 @@ def main():
     # essentially all structural work
     explorer = Explorer(parallel=True,
                         cache_path=invariant_cache_path("model_suite"))
-    suite = price_plans(plans, MACHINES, explorer=explorer)
+    suite = price(plan_request(plans, MACHINES), engine=explorer).suite
     for model in suite.models():
         ranking = suite.machine_ranking(model)
         for rank, (machine, t) in enumerate(ranking):

@@ -15,6 +15,7 @@ large configuration spaces" made measurable.
 """
 import time
 
+from repro.api import gpu_request, price
 from repro.core.access import LaunchConfig
 from repro.core.cachesim import simulate_l1_block, simulate_l2_waves
 from repro.core.engine import Explorer
@@ -82,7 +83,8 @@ def engine_speedup():
     t_serial = time.perf_counter() - t0
 
     t0 = time.perf_counter()
-    report = Explorer(parallel=True).rank_gpu(spec, A100, configs)
+    report = price(gpu_request(spec, A100, configs),
+                   engine=Explorer(parallel=True)).report
     t_engine = time.perf_counter() - t0
 
     identical = len(report.entries) == len(serial) and all(

@@ -21,11 +21,12 @@ import os
 import shutil
 import tempfile
 
+from repro.api import gpu_request, plan_request, price
 from repro.core.engine import Explorer
 from repro.core.machines import A100, TPU_V5E, V100
 from repro.core.selector import enumerate_gpu_configs
 from repro.core.specs import star_stencil_3d
-from repro.suite import lower_all, price_plans
+from repro.suite import lower_all
 
 from .common import bench_json, emit, timed
 
@@ -47,10 +48,12 @@ def paper_grid() -> dict:
     spec = star_stencil_3d(r=4, domain=(48, 96, 128))
     configs = enumerate_gpu_configs(1024)
 
-    exh, t_exh = timed(
-        Explorer(parallel=True).rank_gpu, spec, A100, configs)
-    pruned, t_pruned = timed(
-        Explorer(parallel=True).rank_gpu, spec, A100, configs, top_k=TOP_K)
+    exh, t_exh = timed(lambda: price(
+        gpu_request(spec, A100, configs),
+        engine=Explorer(parallel=True)).report)
+    pruned, t_pruned = timed(lambda: price(
+        gpu_request(spec, A100, configs, top_k=TOP_K),
+        engine=Explorer(parallel=True)).report)
 
     identical = [
         (e.config, e.estimate.perf_lups, e.limiter) for e in pruned.entries
@@ -67,12 +70,12 @@ def paper_grid() -> dict:
     cache_dir = tempfile.mkdtemp(prefix="bench-pruned-")
     try:
         path = f"{cache_dir}/paper_grid.invcache"
-        _, t_cold = timed(
-            Explorer(parallel=True, cache_path=path).rank_gpu,
-            spec, A100, configs, top_k=TOP_K)
-        warm_report, t_warm = timed(
-            Explorer(parallel=True, cache_path=path).rank_gpu,
-            spec, A100, configs, top_k=TOP_K)
+        _, t_cold = timed(lambda: price(
+            gpu_request(spec, A100, configs, top_k=TOP_K),
+            engine=Explorer(parallel=True, cache_path=path)).report)
+        warm_report, t_warm = timed(lambda: price(
+            gpu_request(spec, A100, configs, top_k=TOP_K),
+            engine=Explorer(parallel=True, cache_path=path)).report)
     finally:
         shutil.rmtree(cache_dir, ignore_errors=True)
 
@@ -130,19 +133,19 @@ def model_suite() -> dict:
     plans = lower_all("train_4k")
     grid = enumerate_gpu_configs(512)
 
-    suite_exh, t_exh = timed(
-        price_plans, plans, MACHINES, gpu_configs=grid,
-        explorer=Explorer(parallel=False))
+    suite_exh, t_exh = timed(lambda: price(
+        plan_request(plans, MACHINES, gpu_configs=grid),
+        engine=Explorer(parallel=False)).suite)
 
     cache_dir = tempfile.mkdtemp(prefix="bench-pruned-")
     try:
         path = f"{cache_dir}/model_suite.invcache"
-        suite_cold, t_cold = timed(
-            price_plans, plans, MACHINES, gpu_configs=grid, top_k=1,
-            explorer=Explorer(parallel=False, cache_path=path))
-        suite_warm, t_warm = timed(
-            price_plans, plans, MACHINES, gpu_configs=grid, top_k=1,
-            explorer=Explorer(parallel=False, cache_path=path))
+        suite_cold, t_cold = timed(lambda: price(
+            plan_request(plans, MACHINES, gpu_configs=grid, top_k=1),
+            engine=Explorer(parallel=False, cache_path=path)).suite)
+        suite_warm, t_warm = timed(lambda: price(
+            plan_request(plans, MACHINES, gpu_configs=grid, top_k=1),
+            engine=Explorer(parallel=False, cache_path=path)).suite)
     finally:
         shutil.rmtree(cache_dir, ignore_errors=True)
 

@@ -1,0 +1,219 @@
+"""Daemon soak: warm-path latency and dedupe accounting under load.
+
+The pricing-as-a-service claim (DESIGN.md §12) is that a long-lived
+``repro.serve`` daemon amortizes invariant-cache loading and turns repeat
+pricing into a memo lookup.  This bench stands up a real ``PricingDaemon``
+on a Unix socket and drives it through three phases with exactly-known
+counter outcomes:
+
+  1. **cold prime** — each of the ``DISTINCT`` small GPU requests priced
+     once, sequentially (``keys_priced == DISTINCT``, zero memo traffic);
+  2. **dedupe burst** — one deliberately slow request pipelined ahead of
+     four copies of a fresh request on one connection: the copies land
+     while the first is in flight and must join it
+     (``dedupe_joins == 3``, only two new keys priced);
+  3. **warm storm** — ``SOAK_REQUESTS`` requests (env-tunable for CI
+     smoke) round-robined over the primed set from ``CLIENTS`` concurrent
+     connections: every one is a memo hit;
+  4. **latency probe** — ``LAT_PROBE`` warm requests from one sequential
+     client give the p50/p99 of the warm path itself (the single-digit-ms
+     gate; the concurrent storm measures CPU queueing on a 1-core runner,
+     not the daemon, so throughput rides in phase 3 and latency here).
+
+The scheduler identity ``requests == memo_hits + dedupe_joins +
+keys_priced`` is asserted on the daemon's own counters, and shutdown must
+persist the invariant cache to disk (a fresh ``Explorer`` reloads it).
+"""
+from __future__ import annotations
+
+import os
+import tempfile
+import threading
+import time
+
+from repro.api import gpu_request
+from repro.core.engine import Explorer
+from repro.core.selector import enumerate_gpu_configs
+from repro.core.specs import star_stencil_3d
+from repro.serve import PriceClient, PricingDaemon
+from repro.serve.daemon import can_bind_unix_sockets
+
+from .common import SMALL_A100, bench_json, configs_512, emit
+
+CLIENTS = 8
+LAT_PROBE = 200         # sequential warm requests for the latency gate
+DUPLICATES = 4          # copies of the burst request (3 must join)
+WALL_SLACK = max(float(os.environ.get("BENCH_GATE_SLACK", "1.0")), 1.0)
+WARM_P50_BUDGET_MS = 10.0   # "single-digit ms" warm path
+
+# 12 distinct structural requests at the 1/8-A100 bench scale
+DOMAINS = [(16, 24, 32), (24, 24, 32), (16, 32, 32),
+           (24, 32, 32), (16, 24, 48), (24, 32, 48)]
+RADII = (1, 2)
+
+
+def distinct_requests():
+    configs = configs_512()[:6]
+    return [gpu_request(star_stencil_3d(r=r, domain=d), SMALL_A100, configs)
+            for r in RADII for d in DOMAINS]
+
+
+def burst_requests():
+    """One slow sweep + one fresh quick request (neither primed)."""
+    slow = gpu_request(star_stencil_3d(r=3, domain=(32, 32, 64)),
+                       SMALL_A100, enumerate_gpu_configs(512))
+    quick = gpu_request(star_stencil_3d(r=2, domain=(20, 28, 36)),
+                        SMALL_A100, configs_512()[:6])
+    return slow, quick
+
+
+def percentile(sorted_vals, q):
+    return sorted_vals[min(int(q * (len(sorted_vals) - 1) + 0.5),
+                           len(sorted_vals) - 1)]
+
+
+def warm_storm(socket_path, requests, n_total):
+    """n_total warm requests over CLIENTS concurrent connections."""
+    latencies_ms: list[float] = []
+    lock = threading.Lock()
+    per_client = [n_total // CLIENTS + (1 if i < n_total % CLIENTS else 0)
+                  for i in range(CLIENTS)]
+    errors: list[BaseException] = []
+
+    def run(idx, count):
+        local = []
+        try:
+            with PriceClient(socket_path, timeout=60) as client:
+                for j in range(count):
+                    req = requests[(idx + j) % len(requests)]
+                    t0 = time.perf_counter()
+                    client.price(req)
+                    local.append((time.perf_counter() - t0) * 1e3)
+        except BaseException as exc:  # surfaced after join
+            errors.append(exc)
+        with lock:
+            latencies_ms.extend(local)
+
+    threads = [threading.Thread(target=run, args=(i, c))
+               for i, c in enumerate(per_client)]
+    t0 = time.perf_counter()
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    wall = time.perf_counter() - t0
+    if errors:
+        raise errors[0]
+    return sorted(latencies_ms), wall
+
+
+def main():
+    n_warm = max(int(os.environ.get("SOAK_REQUESTS", "1500")), CLIENTS)
+    tmp = tempfile.mkdtemp(prefix="bench-serve-")
+    if not can_bind_unix_sockets(tmp):
+        raise RuntimeError("environment cannot bind Unix sockets; "
+                           "serve soak needs a real socket")
+    socket_path = os.path.join(tmp, "soak.sock")
+    cache_path = os.path.join(tmp, "soak.invcache")
+
+    requests = distinct_requests()
+    slow, quick = burst_requests()
+    engine = Explorer(parallel=False, cache_path=cache_path)
+
+    with PricingDaemon(socket_path, engine=engine):
+        with PriceClient(socket_path, timeout=300) as client:
+            assert client.ping()
+
+            # phase 1: cold prime, strictly sequential
+            t0 = time.perf_counter()
+            for req in requests:
+                client.price(req)
+            cold_s = time.perf_counter() - t0
+
+            # phase 2: dedupe burst — slow first, then DUPLICATES copies
+            # of one fresh request pipelined behind it on this connection
+            t0 = time.perf_counter()
+            client.price_many([slow] + [quick] * DUPLICATES)
+            burst_s = time.perf_counter() - t0
+
+        # phase 3: concurrent warm storm over the primed set (throughput)
+        _, warm_wall_s = warm_storm(socket_path, requests, n_warm)
+
+        # phase 4: sequential warm-latency probe on one connection
+        lat = []
+        with PriceClient(socket_path, timeout=60) as client:
+            for j in range(LAT_PROBE):
+                t0 = time.perf_counter()
+                client.price(requests[j % len(requests)])
+                lat.append((time.perf_counter() - t0) * 1e3)
+            stats = client.stats()
+        lat.sort()
+        # context exit stops serving, drains, persists the invariant cache
+
+    c = stats
+    distinct = len(requests)
+    expected_keys = distinct + 2             # the primed set + slow + quick
+    expected_joins = DUPLICATES - 1
+    expected_requests = distinct + 1 + DUPLICATES + n_warm + LAT_PROBE
+    consistent = (
+        c["requests"] == c["memo_hits"] + c["dedupe_joins"] + c["keys_priced"]
+        and c["requests"] == expected_requests
+        and c["keys_priced"] == expected_keys
+        and c["dedupe_joins"] == expected_joins
+        and c["memo_hits"] == n_warm + LAT_PROBE
+        and c["errors"] == 0
+    )
+    p50, p99 = percentile(lat, 0.50), percentile(lat, 0.99)
+    warm_p50_ok = p50 < WARM_P50_BUDGET_MS
+
+    # clean shutdown must have persisted the invariant cache
+    cache_persisted = os.path.exists(cache_path)
+    reloaded = Explorer(cache_path=cache_path).cache.loaded_entries \
+        if cache_persisted else 0
+
+    emit("serve_soak/cold_prime", cold_s * 1e6,
+         f"distinct={distinct};keys_priced={c['keys_priced']}")
+    emit("serve_soak/dedupe_burst", burst_s * 1e6,
+         f"joins={c['dedupe_joins']};expected={expected_joins};"
+         f"coalesced_sweeps={c['coalesced_sweeps']}")
+    emit("serve_soak/warm_storm", warm_wall_s * 1e6,
+         f"n={n_warm};clients={CLIENTS};memo_hits={c['memo_hits']};"
+         f"rps={n_warm / max(warm_wall_s, 1e-9):.0f}")
+    emit("serve_soak/latency_probe", sum(lat) * 1e3,
+         f"n={LAT_PROBE};p50_ms={p50:.3f};p99_ms={p99:.3f}")
+    emit("serve_soak/shutdown", 0.0,
+         f"cache_persisted={cache_persisted};reloaded={reloaded}")
+
+    assert consistent, f"scheduler counter identity violated: {c}"
+    assert warm_p50_ok or p50 < WARM_P50_BUDGET_MS * WALL_SLACK, (
+        f"warm p50 {p50:.2f} ms exceeds {WARM_P50_BUDGET_MS} ms budget")
+    assert cache_persisted and reloaded > 0, \
+        "daemon shutdown must persist a reloadable invariant cache"
+
+    cold_per_req_ms = cold_s * 1e3 / distinct
+    bench_json("serve_soak", {
+        "distinct": distinct,
+        "warm_requests": n_warm,
+        "clients": CLIENTS,
+        "requests": c["requests"],
+        "keys_priced": c["keys_priced"],
+        "memo_hits": c["memo_hits"],
+        "dedupe_joins": c["dedupe_joins"],
+        "coalesced_sweeps": c["coalesced_sweeps"],
+        "counters_consistent": consistent,
+        "dedupe_rate": (c["memo_hits"] + c["dedupe_joins"])
+        / max(c["requests"], 1),
+        "cold_s": cold_s,
+        "cold_per_request_ms": cold_per_req_ms,
+        "warm_p50_ms": p50,
+        "warm_p99_ms": p99,
+        "warm_wall_s": warm_wall_s,
+        "warm_over_cold_latency": p50 / max(cold_per_req_ms, 1e-9),
+        "warm_p50_ok": warm_p50_ok,
+        "cache_persisted": cache_persisted,
+        "cache_reloaded_entries": reloaded,
+    })
+
+
+if __name__ == "__main__":
+    main()

@@ -24,6 +24,7 @@ MODULES = [
     "bench_pruned_search",    # §5 tiered bound-then-refine + persistent cache
     "bench_design_space",     # DESIGN §11 geometry-factored machine-axis sweep
     "bench_trace_extract",    # DESIGN §9 spec-extraction frontend parity/cost
+    "bench_serve_soak",       # DESIGN §12 daemon warm latency + dedupe
     "bench_roofline",         # §Roofline table (reads experiments/dryrun)
 ]
 

@@ -10,9 +10,10 @@ analytical estimator, integrated with the model zoo as its code generator.
 
 Run:  PYTHONPATH=src python examples/model_pricing.py
 """
+from repro.api import plan_request, price
 from repro.configs import get_config
 from repro.core.machines import A100, TPU_V5E, V100
-from repro.suite import lower_model, price_plans
+from repro.suite import lower_model
 
 ARCH = "mixtral-8x7b"
 
@@ -24,7 +25,7 @@ print(f"  {len(plan.workloads)} kernel workloads, "
       f"{len(plan.distinct())} distinct structural classes, "
       f"{plan.total_flops()/1e12:.1f} TFLOP useful work per pass")
 
-suite = price_plans({ARCH: plan}, [V100, A100, TPU_V5E])
+suite = price(plan_request({ARCH: plan}, [V100, A100, TPU_V5E])).suite
 print(f"\npriced in {suite.wall_time_s:.1f}s "
       f"(invariant cache: {suite.cache_stats['hits']} hits / "
       f"{suite.cache_stats['misses']} misses)\n")

@@ -11,8 +11,9 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.api import kernel_request, price
 from repro.core.machines import A100, TPU_V5E, V100
-from repro.frontend import arg, price_kernel
+from repro.frontend import arg
 
 # ---- a user kernel: fused scale+shift over row blocks --------------------
 Y, X, TY = 4096, 4096, 128
@@ -36,12 +37,12 @@ def make_scale_shift(scale: float, shift: float):
 
 
 # ---- the whole integration: ~10 lines ------------------------------------
-report = price_kernel(
+report = price(kernel_request(
     make_scale_shift(2.0, 1.0),
     [arg("x", (Y, X), jnp.float32)],
     machines=[V100, A100, TPU_V5E],
     name="scale_shift",
-)
+)).report
 print(report.comparison_table())
 print(f"\nengine: {report.summary()}")
 

@@ -3,7 +3,7 @@
 Builds the paper's two applications — the range-4 3D25pt star stencil and the
 D3Q15 Allen-Cahn LBM interface-tracking kernel — from their specs, prices the
 generators' full decision space through the exploration engine in one
-``Explorer.explore()`` sweep, runs the selected kernels (interpret mode), and
+``repro.api.price()`` sweep, runs the selected kernels (interpret mode), and
 validates against the pure-jnp oracles.
 
 Run:  PYTHONPATH=src python examples/stencil_codegen.py
@@ -12,7 +12,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.engine import Explorer, Workload
+from repro.api import PriceRequest, price
+from repro.core.engine import Workload
 from repro.core.machines import TPU_V5E
 from repro.kernels.lbm_d3q15.generator import candidate_specs as lbm_candidates
 from repro.kernels.lbm_d3q15.ops import lbm_step
@@ -24,8 +25,8 @@ from repro.kernels.stencil3d25.ref import pad_input, star_stencil_ref, star_weig
 # ---- decision space for the paper's production domains -------------------
 # one sweep prices both generators' candidate spaces; infeasible candidates
 # (violated VMEM layer condition) land in report.skipped with their reason
-report = Explorer().explore(
-    [
+report = price(PriceRequest(
+    workloads=[
         Workload("stencil3d25",
                  tpu_candidates=list(st_candidates(4, (512, 512, 640),
                                                    elem_bytes=8))),
@@ -33,8 +34,8 @@ report = Explorer().explore(
                  tpu_candidates=list(lbm_candidates((256, 256, 256),
                                                     elem_bytes=8))[:5]),
     ],
-    [TPU_V5E],
-)
+    machines=[TPU_V5E],
+)).report
 
 print("stencil 3D25pt, domain (512, 512, 640), f64 — ranked candidates:")
 for e in report.ranking("stencil3d25"):

@@ -178,6 +178,31 @@ def check_design_space(gate: Gate, base: dict, cur: dict, slack: float):
                higher_is_better=True)
 
 
+def check_serve_soak(gate: Gate, base: dict, cur: dict, slack: float):
+    # scheduler accounting is exact: every counter relation
+    # (requests == memo_hits + dedupe_joins + keys_priced, one price per
+    # distinct digest, 3 in-flight joins in the burst) checked in-bench
+    gate.equal("serve_soak: scheduler counters consistent",
+               True, bool(cur["counters_consistent"]))
+    gate.equal("serve_soak: distinct request set", base["distinct"],
+               cur["distinct"])
+    gate.equal("serve_soak: keys priced once per digest",
+               base["keys_priced"], cur["keys_priced"])
+    gate.equal("serve_soak: dedupe joins", base["dedupe_joins"],
+               cur["dedupe_joins"])
+    gate.equal("serve_soak: warm p50 single-digit ms",
+               True, bool(cur["warm_p50_ok"]))
+    gate.equal("serve_soak: cache persisted on shutdown",
+               True, bool(cur["cache_persisted"]))
+    # warm memo hit vs cold sweep per-request latency: intra-run and
+    # hardware-portable, but socket micro-timing is noisy — widen 4x so it
+    # only catches the warm path falling off a cliff (e.g. losing the memo)
+    gate.ratio("serve_soak: warm/cold per-request latency ratio",
+               float(base["warm_over_cold_latency"]),
+               float(cur["warm_over_cold_latency"]),
+               slack * 4.0, higher_is_better=False)
+
+
 CHECKS = {
     "perf_ranking": check_perf_ranking,
     "pruned_search": check_pruned_search,
@@ -185,6 +210,7 @@ CHECKS = {
     "model_suite": check_model_suite,
     "trace_extract": check_trace_extract,
     "cachesim_core": check_cachesim_core,
+    "serve_soak": check_serve_soak,
 }
 
 

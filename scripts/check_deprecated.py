@@ -1,0 +1,86 @@
+#!/usr/bin/env python
+"""Lint gate: no internal use of deprecated pricing entry points.
+
+The ``repro.api`` facade is the one front door (DESIGN.md §12); the legacy
+signatures — ``Explorer.rank_gpu`` / ``rank_pallas`` / ``explore`` /
+``explore_plans``, ``suite.price_plans``, ``frontend.price_kernel`` — are
+kept only as ``DeprecationWarning`` shims for external callers.  This
+script walks the AST of everything under ``src/repro``, ``benchmarks``,
+``examples`` and ``scripts`` and fails on any *call* to a deprecated name,
+so the shims cannot creep back into the codebase.  Tests are exempt: they
+deliberately exercise the shims (parity + warning coverage).
+
+Run:  python scripts/check_deprecated.py
+"""
+from __future__ import annotations
+
+import ast
+import os
+import sys
+
+ROOTS = ("src/repro", "benchmarks", "examples", "scripts")
+
+# method-style shims (obj.rank_gpu(...)) and function-style shims
+DEPRECATED_ATTRS = {"rank_gpu", "rank_pallas", "explore", "explore_plans"}
+DEPRECATED_FUNCS = {"price_plans", "price_kernel"}
+
+# the shims themselves (and the deprecation helper) live here
+EXEMPT_FILES = {
+    os.path.join("src", "repro", "core", "engine", "explorer.py"),
+    os.path.join("src", "repro", "suite", "report.py"),
+    os.path.join("src", "repro", "frontend", "__init__.py"),
+}
+SELF = os.path.join("scripts", "check_deprecated.py")
+
+
+def deprecated_calls(path: str) -> list[tuple[int, str]]:
+    with open(path, encoding="utf-8") as f:
+        try:
+            tree = ast.parse(f.read(), filename=path)
+        except SyntaxError as exc:
+            return [(exc.lineno or 0, f"syntax error: {exc.msg}")]
+    hits = []
+    for node in ast.walk(tree):
+        if not isinstance(node, ast.Call):
+            continue
+        fn = node.func
+        if isinstance(fn, ast.Attribute) and (
+                fn.attr in DEPRECATED_ATTRS or fn.attr in DEPRECATED_FUNCS):
+            hits.append((node.lineno, fn.attr))
+        elif isinstance(fn, ast.Name) and fn.id in DEPRECATED_FUNCS:
+            hits.append((node.lineno, fn.id))
+    return hits
+
+
+def main() -> int:
+    repo = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    failures = []
+    checked = 0
+    for root in ROOTS:
+        base = os.path.join(repo, root)
+        if not os.path.isdir(base):
+            continue
+        for dirpath, _dirnames, filenames in os.walk(base):
+            for fname in sorted(filenames):
+                if not fname.endswith(".py"):
+                    continue
+                path = os.path.join(dirpath, fname)
+                rel = os.path.relpath(path, repo)
+                if rel in EXEMPT_FILES or rel == SELF:
+                    continue
+                checked += 1
+                for lineno, name in deprecated_calls(path):
+                    failures.append(f"{rel}:{lineno}: call to deprecated "
+                                    f"entry point {name!r} — use repro.api")
+    for f in failures:
+        print(f"FAIL: {f}")
+    if failures:
+        print(f"{len(failures)} deprecated call(s) in {checked} files; "
+              f"migrate to repro.api.price() (see README migration table)")
+        return 1
+    print(f"OK: no deprecated entry-point calls in {checked} files")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

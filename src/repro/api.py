@@ -1,0 +1,272 @@
+"""The unified pricing API: one request schema, one result schema.
+
+Every way of asking the estimator a question — a GPU ``KernelSpec`` with
+launch configs, ``(config, PallasKernelSpec)`` candidates, engine
+``Workload``s, suite ``ModelPlan``s / ``PlanRef``s, traced Pallas kernels —
+is a ``PriceRequest``; every answer is a ``PriceResult``.  The same frozen
+dataclasses travel in-process (``price(request)``) and over the
+``repro.serve`` wire (encoded by ``repro.serve.schema``), so a client of the
+daemon and a caller of the library see identical results by construction.
+
+    from repro.api import gpu_request, price
+
+    result = price(gpu_request(spec, "A100", top_k=5))
+    for e in result.ranking():
+        print(e.config, e.perf, e.limiter)
+
+Legacy entry points (``Explorer.rank_gpu`` / ``rank_pallas`` / ``explore`` /
+``explore_plans``, ``suite.price_plans``, ``frontend.price_kernel``) survive
+as deprecation shims over the same implementation — see the migration table
+in README.md.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from typing import Any
+
+from repro.core.engine import Explorer, Workload
+from repro.core.machines import get_machine
+
+API_VERSION = 1
+
+
+@dataclass(frozen=True)
+class PlanRef:
+    """A wire-serializable reference to a suite model plan.
+
+    ``ModelPlan`` holds an ``ArchConfig`` and interned spec callables —
+    in-process only — so requests that cross a socket carry the recipe
+    instead: ``price`` resolves it through ``configs.get_config`` +
+    ``suite.lower_model`` on the serving side.
+    """
+
+    arch: str
+    shape: str = "train_4k"
+    batch: int = 1
+
+    def resolve(self):
+        from repro.configs import get_config
+        from repro.suite import lower_model
+
+        return lower_model(get_config(self.arch), self.shape, self.batch)
+
+
+@dataclass(frozen=True)
+class PriceRequest:
+    """One pricing question, versioned and value-like.
+
+    ``workloads``: engine ``Workload``s (a bare GPU ``KernelSpec`` is
+    promoted, as ``Explorer`` always did).  ``plans``: ``{name: ModelPlan |
+    PlanRef}`` (or an items tuple) — priced through suite lowering into the
+    same sweep, results folded into ``result.suite``.  ``traced``:
+    ``frontend.TracedSpecPayload``s from ``trace_payload``.  ``machines``:
+    registry names (see ``core.machines.MACHINES``) or machine objects.
+    ``gpu_configs`` overrides the GPU launch-config list for plan lowering
+    and for workloads that do not carry their own.
+    """
+
+    workloads: tuple = ()
+    plans: tuple = ()
+    traced: tuple = ()
+    machines: tuple = ()
+    gpu_configs: tuple | None = None
+    top_k: int | None = None
+    strict: bool = False
+    machine_axis: bool = False
+    version: int = API_VERSION
+
+    def __post_init__(self):
+        object.__setattr__(self, "workloads", tuple(self.workloads))
+        plans = self.plans
+        if isinstance(plans, dict):
+            plans = tuple(plans.items())
+        object.__setattr__(self, "plans", tuple(tuple(p) for p in plans))
+        object.__setattr__(self, "traced", tuple(self.traced))
+        machines = self.machines
+        if not isinstance(machines, (list, tuple)):
+            machines = (machines,)
+        object.__setattr__(self, "machines", tuple(machines))
+        if self.gpu_configs is not None:
+            object.__setattr__(self, "gpu_configs", tuple(self.gpu_configs))
+
+    @property
+    def empty(self) -> bool:
+        return not (self.workloads or self.plans or self.traced)
+
+
+@dataclass(frozen=True)
+class PriceResult:
+    """One pricing answer: the engine's ``ExplorationReport`` plus, when the
+    request carried suite plans, the folded ``SuiteReport``.
+
+    The common report accessors are re-exported so most callers never reach
+    inside: ``result.ranking(workload, machine)``, ``result.best(...)``,
+    ``result.cache_stats`` ...
+    """
+
+    report: Any
+    suite: Any = None
+    version: int = API_VERSION
+
+    # ---- report passthrough --------------------------------------------
+    @property
+    def entries(self):
+        return self.report.entries
+
+    @property
+    def skipped(self):
+        return self.report.skipped
+
+    @property
+    def pruned(self):
+        return self.report.pruned
+
+    @property
+    def cache_stats(self) -> dict:
+        return self.report.cache_stats
+
+    @property
+    def wall_time_s(self) -> float:
+        return self.report.wall_time_s
+
+    def ranking(self, workload=None, machine=None):
+        return self.report.ranking(workload, machine)
+
+    def best(self, workload=None, machine=None):
+        return self.report.best(workload, machine)
+
+    def to_json_dict(self) -> dict:
+        """The versioned, exact wire form (repro.serve.schema codec)."""
+        from repro.serve.schema import encode
+
+        return encode(self)
+
+
+# ==========================================================================
+# request builders — one per legacy entry-point shape
+# ==========================================================================
+def gpu_request(spec, machine, configs=None, *, capacity=None,
+                total_threads: int = 1024, top_k: int | None = None,
+                strict: bool = False) -> PriceRequest:
+    """What ``Explorer.rank_gpu(spec, machine, configs)`` asked."""
+    if configs is None:
+        from repro.core.selector import enumerate_gpu_configs
+
+        configs = enumerate_gpu_configs(total_threads)
+    return PriceRequest(
+        workloads=(Workload(name=spec.name, gpu_spec=spec,
+                            gpu_configs=tuple(configs), capacity=capacity),),
+        machines=(machine,), top_k=top_k, strict=strict,
+    )
+
+
+def pallas_request(candidates, machine="TPUv5e", *,
+                   workload: str | None = None,
+                   top_k: int | None = None,
+                   strict: bool = False) -> PriceRequest:
+    """What ``Explorer.rank_pallas(candidates, machine)`` asked."""
+    candidates = tuple(candidates)
+    name = workload or (candidates[0][1].name if candidates else "pallas")
+    return PriceRequest(
+        workloads=(Workload(name=name, tpu_candidates=candidates),),
+        machines=(machine,), top_k=top_k, strict=strict,
+    )
+
+
+def plan_request(plans: dict, machines, *, gpu_configs=None,
+                 top_k: int | None = None,
+                 strict: bool = False) -> PriceRequest:
+    """What ``suite.price_plans(plans, machines)`` asked.
+
+    ``plans`` values may be ``ModelPlan``s (in-process) or ``PlanRef``s
+    (serializable — resolved on the pricing side).
+    """
+    return PriceRequest(plans=plans, machines=machines,
+                        gpu_configs=gpu_configs, top_k=top_k, strict=strict)
+
+
+def kernel_request(call_fn, args, machines, *, name: str = "kernel",
+                   costs=None, rename: dict | None = None,
+                   top_k: int | None = None) -> PriceRequest:
+    """What ``frontend.price_kernel(call_fn, args, machines)`` asked.
+
+    Tracing happens here, eagerly (it needs jax and the kernel callable);
+    the returned request carries only the pure-value payload, so it can
+    cross the ``repro.serve`` wire.
+    """
+    from repro.frontend import trace_payload
+
+    payload = trace_payload(call_fn, args, name=name, costs=costs,
+                            rename=rename)
+    return PriceRequest(traced=(payload,), machines=machines, top_k=top_k)
+
+
+# ==========================================================================
+# the one entry point
+# ==========================================================================
+def _resolve_machine(m):
+    return get_machine(m) if isinstance(m, str) else m
+
+
+def _resolve_plan(plan):
+    return plan.resolve() if isinstance(plan, PlanRef) else plan
+
+
+def price(request: PriceRequest, *, engine: Explorer | None = None,
+          progress=None) -> PriceResult:
+    """Answer one ``PriceRequest`` in a single engine sweep.
+
+    Workloads, traced kernels, and every suite plan's lowered kernels run
+    through ONE ``Explorer`` sweep — sharing the invariant cache, cell-level
+    dedupe, and (with ``machine_axis``) geometry batching — then suite plans
+    fold their namespaced entries into ``result.suite``.  ``engine`` lets a
+    long-lived caller (the ``repro.serve`` daemon, a warm notebook) reuse
+    one Explorer across requests.
+    """
+    if request.version > API_VERSION:
+        raise ValueError(
+            f"request version {request.version} is newer than this "
+            f"library's API_VERSION {API_VERSION}")
+    explorer = engine or Explorer()
+    machines = [_resolve_machine(m) for m in request.machines]
+
+    workloads = [
+        w if isinstance(w, Workload) else Workload(name=w.name, gpu_spec=w)
+        for w in request.workloads
+    ]
+    if request.gpu_configs is not None:
+        workloads = [
+            dataclasses.replace(w, gpu_configs=request.gpu_configs)
+            if w.gpu_configs is None and w.gpu_spec is not None else w
+            for w in workloads
+        ]
+    for t in request.traced:
+        workloads.append(Workload(
+            name=t.name, gpu_spec=t.gpu_spec,
+            tpu_candidates=[({}, t.tpu_spec)]))
+
+    plans = {name: _resolve_plan(p) for name, p in request.plans}
+    if plans:
+        from repro.suite import suite_from_report, suite_gpu_configs
+
+        gpu_configs = (list(request.gpu_configs)
+                       if request.gpu_configs is not None
+                       else suite_gpu_configs())
+        for name, plan in plans.items():
+            for w in plan.engine_workloads(gpu_configs):
+                workloads.append(
+                    dataclasses.replace(w, name=f"{name}::{w.name}"))
+
+    report = explorer._explore(workloads, machines, strict=request.strict,
+                               top_k=request.top_k, progress=progress,
+                               machine_axis=request.machine_axis)
+    suite = suite_from_report(plans, machines, report) if plans else None
+    return PriceResult(report=report, suite=suite)
+
+
+__all__ = [
+    "API_VERSION", "PlanRef", "PriceRequest", "PriceResult",
+    "gpu_request", "pallas_request", "plan_request", "kernel_request",
+    "price",
+]

@@ -152,8 +152,8 @@ def design_space_sweep(workloads, machines, *, top_k: int = 10,
     from .engine import Explorer
 
     explorer = explorer or Explorer(parallel=True)
-    return explorer.explore(workloads, machines, configs, top_k=top_k,
-                            progress=progress, machine_axis=True)
+    return explorer._explore(workloads, machines, configs, top_k=top_k,
+                             progress=progress, machine_axis=True)
 
 
 @dataclass(frozen=True)

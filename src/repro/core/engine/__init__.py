@@ -2,15 +2,16 @@
 
 The paper's workflow (fig. 1) prices one configuration; this subsystem prices
 *spaces* — the full eq.-6 grid, multiple kernels, multiple (including
-hypothetical) machines — through a single ``Explorer`` API:
+hypothetical) machines — behind the unified ``repro.api`` facade:
 
-    from repro.core.engine import Explorer, Workload
+    from repro.api import PriceRequest, price
+    from repro.core.engine import Workload
 
-    report = Explorer(parallel=True).explore(
-        [Workload("stencil", gpu_spec=spec, tpu_candidates=cands)],
-        [V100, A100, TPU_V5E],
-    )
-    print(report.comparison_table())
+    result = price(PriceRequest(
+        workloads=[Workload("stencil", gpu_spec=spec, tpu_candidates=cands)],
+        machines=["V100", "A100", "TPUv5e"],
+    ))
+    print(result.report.comparison_table())
 
 ``top_k=...`` turns any sweep into a tiered bound-then-refine search (same
 top-k results, a fraction of the structural work); ``cache_path=...`` makes

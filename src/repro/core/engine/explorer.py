@@ -33,7 +33,9 @@ from __future__ import annotations
 
 import bisect
 import dataclasses
+import threading
 import time
+import warnings
 from dataclasses import dataclass, field as dc_field
 from typing import Iterable, Sequence
 
@@ -47,6 +49,7 @@ from .protocol import (
     EvalResult,
     ExplorationReport,
     PrunedConfig,
+    RejectedSpec,
     SkipConfig,
     SkippedConfig,
 )
@@ -196,8 +199,25 @@ class _CellRun:
         return self._ranked
 
 
+def _deprecated(old: str, new: str):
+    warnings.warn(
+        f"Explorer.{old}() is deprecated; build a repro.api.PriceRequest "
+        f"and call repro.api.price() instead ({new} keeps the old "
+        f"behaviour for in-process callers)",
+        DeprecationWarning, stacklevel=3,
+    )
+
+
 class Explorer:
-    """Staged, memoized, optionally parallel + pruned config-space search."""
+    """Staged, memoized, optionally parallel + pruned config-space search.
+
+    An Explorer is reentrant: concurrent callers (the ``repro.serve``
+    scheduler's workers, threaded clients of ``repro.api.price``) may issue
+    sweeps against one shared instance — ``_sweep`` serializes them behind a
+    lock so cache statistics deltas, ``hold()`` scoping, and persistence
+    stay coherent.  The cross-sweep memoization then makes the serialized
+    sweeps cheap: whatever the first request priced, the rest reuse.
+    """
 
     def __init__(self, *, parallel: bool = False, max_workers: int | None = None,
                  cache: InvariantCache | None = None,
@@ -219,12 +239,59 @@ class Explorer:
                                    max_bytes=cache_max_bytes)
         self.cache = cache
         self.strict = strict
+        self._sweep_lock = threading.RLock()
 
-    # ---- single-cell entry points --------------------------------------
+    # ---- deprecated public entry points --------------------------------
+    # The historical per-shape methods survive as shims over the private
+    # implementations so existing callers keep working bitwise-identically;
+    # new code goes through repro.api.price (one request/result schema,
+    # in-process and over the repro.serve wire alike).
     def rank_gpu(self, spec, machine: GPUMachine, configs=None, *,
                  capacity: CapacityModel | None = None,
                  total_threads: int = 1024, strict: bool | None = None,
                  top_k: int | None = None, progress=None) -> ExplorationReport:
+        """Deprecated: use ``repro.api.price(gpu_request(...))``."""
+        _deprecated("rank_gpu", "Explorer._rank_gpu")
+        return self._rank_gpu(spec, machine, configs, capacity=capacity,
+                              total_threads=total_threads, strict=strict,
+                              top_k=top_k, progress=progress)
+
+    def rank_pallas(self, candidates: Iterable,
+                    machine: TPUMachine = TPU_V5E, *,
+                    workload: str | None = None,
+                    strict: bool | None = None,
+                    top_k: int | None = None,
+                    progress=None) -> ExplorationReport:
+        """Deprecated: use ``repro.api.price(pallas_request(...))``."""
+        _deprecated("rank_pallas", "Explorer._rank_pallas")
+        return self._rank_pallas(candidates, machine, workload=workload,
+                                 strict=strict, top_k=top_k,
+                                 progress=progress)
+
+    def explore(self, workloads, machines, configs=None, *,
+                strict: bool | None = None, top_k: int | None = None,
+                progress=None, machine_axis: bool = False) -> ExplorationReport:
+        """Deprecated: use ``repro.api.price(PriceRequest(...))``."""
+        _deprecated("explore", "Explorer._explore")
+        return self._explore(workloads, machines, configs, strict=strict,
+                             top_k=top_k, progress=progress,
+                             machine_axis=machine_axis)
+
+    def explore_plans(self, plans, machines, *,
+                      strict: bool | None = None, top_k: int | None = None,
+                      progress=None,
+                      machine_axis: bool = False) -> ExplorationReport:
+        """Deprecated: use ``repro.api.price(PriceRequest(plans=...))``."""
+        _deprecated("explore_plans", "Explorer._explore_plans")
+        return self._explore_plans(plans, machines, strict=strict,
+                                   top_k=top_k, progress=progress,
+                                   machine_axis=machine_axis)
+
+    # ---- single-cell entry points --------------------------------------
+    def _rank_gpu(self, spec, machine: GPUMachine, configs=None, *,
+                  capacity: CapacityModel | None = None,
+                  total_threads: int = 1024, strict: bool | None = None,
+                  top_k: int | None = None, progress=None) -> ExplorationReport:
         """Rank launch configurations of one kernel on one GPU machine.
 
         ``top_k`` switches to the tiered bound-then-refine search: only the
@@ -241,12 +308,12 @@ class Explorer:
             strict=strict, top_k=top_k, progress=progress,
         )
 
-    def rank_pallas(self, candidates: Iterable,
-                    machine: TPUMachine = TPU_V5E, *,
-                    workload: str | None = None,
-                    strict: bool | None = None,
-                    top_k: int | None = None,
-                    progress=None) -> ExplorationReport:
+    def _rank_pallas(self, candidates: Iterable,
+                     machine: TPUMachine = TPU_V5E, *,
+                     workload: str | None = None,
+                     strict: bool | None = None,
+                     top_k: int | None = None,
+                     progress=None) -> ExplorationReport:
         """Rank (config, PallasKernelSpec) candidates on one TPU machine."""
         candidates = list(candidates)
         name = workload or (candidates[0][1].name if candidates else "pallas")
@@ -256,9 +323,9 @@ class Explorer:
         )
 
     # ---- sweep front-end ----------------------------------------------
-    def explore(self, workloads, machines, configs=None, *,
-                strict: bool | None = None, top_k: int | None = None,
-                progress=None, machine_axis: bool = False) -> ExplorationReport:
+    def _explore(self, workloads, machines, configs=None, *,
+                 strict: bool | None = None, top_k: int | None = None,
+                 progress=None, machine_axis: bool = False) -> ExplorationReport:
         """Price every workload on every machine in one call.
 
         ``workloads``: Workload instances (a bare KernelSpec is promoted to a
@@ -289,6 +356,12 @@ class Explorer:
                     if w.gpu_spec is None:
                         undefined.append((w, m, "no GPU kernel spec defined"))
                         continue
+                    if isinstance(w.gpu_spec, RejectedSpec):
+                        # a frontend tracer rejection travels inside the
+                        # workload and is recorded by the engine directly —
+                        # no post-sweep report mutation (DESIGN.md §12)
+                        undefined.append((w, m, w.gpu_spec.reason))
+                        continue
                     gpu_configs = configs if configs is not None else w.gpu_configs
                     if gpu_configs is None:
                         from ..selector import enumerate_gpu_configs
@@ -314,10 +387,10 @@ class Explorer:
                 SkippedConfig(w.name, m.name, None, reason))
         return report
 
-    def explore_plans(self, plans, machines, *,
-                      strict: bool | None = None, top_k: int | None = None,
-                      progress=None,
-                      machine_axis: bool = False) -> ExplorationReport:
+    def _explore_plans(self, plans, machines, *,
+                       strict: bool | None = None, top_k: int | None = None,
+                       progress=None,
+                       machine_axis: bool = False) -> ExplorationReport:
         """Price a batch of named workload plans in ONE sweep.
 
         ``plans``: mapping plan name -> iterable of ``Workload``.  Workload
@@ -332,21 +405,33 @@ class Explorer:
             for pname, wls in plans.items()
             for w in wls
         ]
-        return self.explore(namespaced, machines, strict=strict, top_k=top_k,
-                            progress=progress, machine_axis=machine_axis)
+        return self._explore(namespaced, machines, strict=strict, top_k=top_k,
+                             progress=progress, machine_axis=machine_axis)
 
     # ---- persistence ---------------------------------------------------
     def save_cache(self) -> int:
         """Persist the invariant cache if it has a path; returns entries
         written (0 when not persistent or already clean)."""
-        if self.cache.path and self.cache.dirty:
-            return self.cache.save()
-        return 0
+        with self._sweep_lock:
+            if self.cache.path and self.cache.dirty:
+                return self.cache.save()
+            return 0
 
     # ---- the staged core ----------------------------------------------
     def _sweep(self, cells, *, strict: bool | None = None,
                top_k: int | None = None, progress=None,
                machine_axis: bool = False) -> ExplorationReport:
+        # Reentrancy: one sweep at a time per Explorer.  Concurrent service
+        # requests queue here; the winner warms the invariant cache, so the
+        # serialized followers are mostly cache replays.
+        with self._sweep_lock:
+            return self._sweep_impl(cells, strict=strict, top_k=top_k,
+                                    progress=progress,
+                                    machine_axis=machine_axis)
+
+    def _sweep_impl(self, cells, *, strict: bool | None = None,
+                    top_k: int | None = None, progress=None,
+                    machine_axis: bool = False) -> ExplorationReport:
         strict = self.strict if strict is None else strict
         t0 = time.perf_counter()
         hits0, misses0 = self.cache.hits, self.cache.misses

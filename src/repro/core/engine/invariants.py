@@ -32,6 +32,7 @@ import io
 import os
 import pickle
 import tempfile
+import threading
 from typing import Hashable
 
 # Bump whenever a structural task's semantics, arguments, or key schema
@@ -91,6 +92,7 @@ class InvariantCache:
         self.evictions = 0
         self.evicted_bytes = 0
         self._held = 0
+        self._hold_lock = threading.RLock()
         self._bytes = 0
         self._sizes: dict = {}      # key -> record bytes (max_bytes only)
         self.path = os.fspath(path) if path is not None else None
@@ -138,15 +140,20 @@ class InvariantCache:
         back (``peek``) during result assembly; an eviction in between
         would drop a value before it is consumed.  Budgets therefore apply
         *between* sweeps: on exiting the outermost hold, the cache evicts
-        down to budget in one pass.  Nesting-safe.
+        down to budget in one pass.  Nesting-safe, and thread-safe: holds
+        taken by concurrent sweeps (repro.serve shares one cache across
+        scheduler workers) balance under a lock, so no thread evicts while
+        another's sweep is in flight.
         """
-        self._held += 1
+        with self._hold_lock:
+            self._held += 1
         try:
             yield self
         finally:
-            self._held -= 1
-            if self._held == 0:
-                self._evict_over_budget()
+            with self._hold_lock:
+                self._held -= 1
+                if self._held == 0:
+                    self._evict_over_budget()
 
     def _evict_over_budget(self) -> None:
         if not self._bounded or self._held:

@@ -183,3 +183,29 @@ class TPUMachine:
 
 
 TPU_V5E = TPUMachine()
+
+
+# --------------------------------------------------------------------------
+# machine registry: wire requests (repro.serve) and PriceRequests reference
+# machines by name; hypothetical variants travel as full parameter sets.
+# --------------------------------------------------------------------------
+MACHINES: dict = {m.name: m for m in (V100, A100, A100_80G, H100, TPU_V5E)}
+# short aliases for the common cards
+MACHINES.update({
+    "V100": V100,
+    "A100": A100,
+    "A100-80G": A100_80G,
+    "H100": H100,
+    "TPUv5e": TPU_V5E,
+})
+
+
+def get_machine(name: str):
+    """Resolve a machine by registry name or alias (KeyError with the
+    known names when unknown)."""
+    try:
+        return MACHINES[name]
+    except KeyError:
+        raise KeyError(
+            f"unknown machine {name!r}; known: {sorted(MACHINES)}"
+        ) from None

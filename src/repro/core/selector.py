@@ -121,7 +121,7 @@ def rank_gpu_configs(
     from .engine import Explorer
 
     explorer = engine or Explorer(parallel=parallel)
-    report = explorer.rank_gpu(
+    report = explorer._rank_gpu(
         spec, machine, configs, capacity=capacity,
         total_threads=total_threads, strict=strict, top_k=top_k,
         progress=progress,

@@ -378,7 +378,7 @@ def select_pallas_config(
 
     candidates = list(candidates)
     explorer = engine or Explorer()
-    report = explorer.rank_pallas(candidates, machine, top_k=top_k)
+    report = explorer._rank_pallas(candidates, machine, top_k=top_k)
     ranked = [
         RankedPallasConfig(r.config, candidates[r.index][1], r.estimate)
         for r in report.entries

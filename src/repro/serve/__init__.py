@@ -1,0 +1,16 @@
+"""Pricing-as-a-service: daemon, scheduler, client, wire schema.
+
+One long-lived process (``python -m repro.serve``) holds the warm
+``InvariantCache`` and memoized stream tables; every code-generation run on
+the machine prices against it through ``repro.serve.client.PriceClient``
+using the same ``PriceRequest``/``PriceResult`` schema as the in-process
+``repro.api.price``.  DESIGN.md §12 documents the architecture, wire
+protocol, and the cache versioning/eviction contract.
+"""
+from .client import PriceClient, ServeError
+from .daemon import PricingDaemon, serve
+from .scheduler import Scheduler
+from .schema import SCHEMA_VERSION, request_digest
+
+__all__ = ["PriceClient", "ServeError", "PricingDaemon", "serve",
+           "Scheduler", "SCHEMA_VERSION", "request_digest"]

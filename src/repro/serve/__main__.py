@@ -1,0 +1,5 @@
+import sys
+
+from .daemon import main
+
+sys.exit(main())

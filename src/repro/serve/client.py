@@ -1,0 +1,130 @@
+"""Client for the pricing daemon.
+
+    from repro.api import gpu_request
+    from repro.serve.client import PriceClient
+
+    with PriceClient("/tmp/repro-serve.sock") as c:
+        result = c.price(gpu_request(spec, "A100", top_k=5))
+        print(result.report.comparison_table())
+
+``price_many`` pipelines a batch over one connection and yields results to
+``on_result`` as the daemon streams them back (completion order), while the
+returned list preserves request order.
+"""
+from __future__ import annotations
+
+import json
+import socket
+import threading
+
+from repro.api import PriceRequest, PriceResult
+
+from .schema import SCHEMA_VERSION, decode, encode
+
+
+class ServeError(RuntimeError):
+    """An error line from the daemon (bad request, engine failure, skew)."""
+
+
+class PriceClient:
+    def __init__(self, socket_path: str, *, timeout: float | None = None):
+        self._sock = socket.socket(socket.AF_UNIX, socket.SOCK_STREAM)
+        if timeout is not None:
+            self._sock.settimeout(timeout)
+        self._sock.connect(socket_path)
+        self._rfile = self._sock.makefile("rb")
+        self._send_lock = threading.Lock()
+        self._next_id = 0
+
+    # ---- wire plumbing -------------------------------------------------
+    def _send(self, payload: dict) -> None:
+        payload.setdefault("schema_version", SCHEMA_VERSION)
+        data = (json.dumps(payload, separators=(",", ":")) + "\n").encode()
+        with self._send_lock:
+            self._sock.sendall(data)
+
+    def _recv(self) -> dict:
+        line = self._rfile.readline()
+        if not line:
+            raise ServeError("daemon closed the connection")
+        return json.loads(line)
+
+    def _take_id(self) -> int:
+        with self._send_lock:
+            self._next_id += 1
+            return self._next_id
+
+    # ---- ops -----------------------------------------------------------
+    def ping(self) -> bool:
+        self._send({"op": "ping"})
+        return self._recv().get("op") == "pong"
+
+    def stats(self) -> dict:
+        self._send({"op": "stats"})
+        msg = self._recv()
+        if not msg.get("ok"):
+            raise ServeError(msg.get("error", "stats failed"))
+        return msg["stats"]
+
+    def shutdown_server(self) -> None:
+        self._send({"op": "shutdown"})
+        try:
+            self._recv()
+        except ServeError:
+            pass
+
+    def price(self, request: PriceRequest) -> PriceResult:
+        """Price one request, blocking until its result streams back."""
+        return self.price_many([request])[0]
+
+    def price_many(self, requests, on_result=None) -> list:
+        """Pipeline a batch; returns results in request order.
+
+        ``on_result(index, result)`` fires in the daemon's completion
+        order — a warm (memoized) answer arrives without waiting for cold
+        sweeps submitted before it.
+        """
+        requests = list(requests)
+        ids = {}
+        for i, request in enumerate(requests):
+            rid = self._take_id()
+            ids[rid] = i
+            self._send({"op": "price", "id": rid,
+                        "request": encode(request)})
+        out: list = [None] * len(requests)
+        remaining = len(requests)
+        first_error = None
+        while remaining:
+            msg = self._recv()
+            rid = msg.get("id")
+            if rid not in ids:
+                continue            # e.g. an interleaved pong
+            i = ids.pop(rid)
+            remaining -= 1
+            if not msg.get("ok"):
+                first_error = first_error or ServeError(
+                    msg.get("error", "pricing failed"))
+                continue
+            result = decode(msg["result"])
+            out[i] = result
+            if on_result is not None:
+                on_result(i, result)
+        if first_error is not None:
+            raise first_error
+        return out
+
+    def close(self) -> None:
+        try:
+            self._rfile.close()
+        finally:
+            self._sock.close()
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        self.close()
+        return False
+
+
+__all__ = ["PriceClient", "ServeError"]

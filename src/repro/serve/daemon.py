@@ -1,0 +1,210 @@
+"""The pricing daemon: a long-lived estimator behind a Unix socket.
+
+``python -m repro.serve --socket /tmp/repro.sock --cache-path ~/.repro.inv``
+starts one process that loads the ``InvariantCache`` (and, through it, the
+memoized stream tables) once and serves every code-generation run on the
+machine.  Protocol: newline-delimited JSON over a local stream socket, one
+message per line, every line carrying ``schema_version``.
+
+Client -> server ops:
+    {"op": "price", "id": <any>, "request": <encoded PriceRequest>}
+    {"op": "stats"} | {"op": "ping"} | {"op": "shutdown"}
+
+Server -> client lines:
+    {"ok": true, "op": "result", "id": ..., "digest": ..., "result": ...}
+    {"ok": true, "op": "stats"/"pong"/"bye", ...}
+    {"ok": false, "id": ..., "error": "..."}
+
+A connection may pipeline many ``price`` ops; results stream back **as
+they complete** (matched by ``id``, not by order) — a memo-hit answer for
+request 50 does not wait behind a cold sweep for request 1.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import socket
+import socketserver
+import threading
+
+from repro.core.engine import Explorer
+
+from .scheduler import Scheduler
+from .schema import SCHEMA_VERSION, decode, encode, request_digest
+
+
+def _line(payload: dict) -> bytes:
+    payload.setdefault("schema_version", SCHEMA_VERSION)
+    return (json.dumps(payload, separators=(",", ":")) + "\n").encode()
+
+
+class _Handler(socketserver.StreamRequestHandler):
+    def handle(self):
+        server: PricingDaemon = self.server  # type: ignore[assignment]
+        write_lock = threading.Lock()
+
+        def send(payload: dict):
+            data = _line(payload)
+            with write_lock:
+                try:
+                    self.wfile.write(data)
+                    self.wfile.flush()
+                except (BrokenPipeError, OSError):
+                    pass
+
+        for raw in self.rfile:
+            raw = raw.strip()
+            if not raw:
+                continue
+            try:
+                msg = json.loads(raw)
+                op = msg.get("op")
+            except Exception as exc:
+                send({"ok": False, "error": f"bad message: {exc}"})
+                continue
+            if op == "ping":
+                send({"ok": True, "op": "pong"})
+            elif op == "stats":
+                send({"ok": True, "op": "stats",
+                      "stats": server.scheduler.stats()})
+            elif op == "shutdown":
+                send({"ok": True, "op": "bye"})
+                server.request_shutdown()
+                return
+            elif op == "price":
+                self._price(server, msg, send)
+            else:
+                send({"ok": False, "id": msg.get("id"),
+                      "error": f"unknown op {op!r}"})
+
+    def _price(self, server, msg, send):
+        req_id = msg.get("id")
+        try:
+            version = msg.get("schema_version")
+            if version != SCHEMA_VERSION:
+                raise ValueError(f"schema version {version} != "
+                                 f"{SCHEMA_VERSION}")
+            request = decode(msg["request"])
+            digest = request_digest(request)
+        except Exception as exc:
+            send({"ok": False, "id": req_id,
+                  "error": f"{type(exc).__name__}: {exc}"})
+            return
+
+        def on_done(fut):
+            try:
+                result = fut.result()
+            except Exception as exc:
+                send({"ok": False, "id": req_id, "digest": digest,
+                      "error": f"{type(exc).__name__}: {exc}"})
+                return
+            # memoized wire rendering: warm answers re-send cached text
+            wire = server.scheduler.encoded(digest, result)
+            body = json.loads(wire)["body"]
+            send({"ok": True, "op": "result", "id": req_id,
+                  "digest": digest, "result": body})
+
+        try:
+            server.scheduler.submit(request, digest).add_done_callback(on_done)
+        except RuntimeError as exc:      # shutting down
+            send({"ok": False, "id": req_id, "error": str(exc)})
+
+
+class PricingDaemon(socketserver.ThreadingUnixStreamServer):
+    """Threaded Unix-socket server wrapping one shared ``Scheduler``."""
+
+    daemon_threads = True
+    allow_reuse_address = True
+
+    def __init__(self, socket_path: str, *, engine: Explorer | None = None,
+                 scheduler: Scheduler | None = None, memo_entries: int = 1024):
+        self.socket_path = os.fspath(socket_path)
+        if os.path.exists(self.socket_path):
+            os.unlink(self.socket_path)
+        self.scheduler = scheduler or Scheduler(engine,
+                                                memo_entries=memo_entries)
+        self._shutdown_requested = threading.Event()
+        super().__init__(self.socket_path, _Handler)
+
+    def request_shutdown(self):
+        """Asynchronous clean-exit request (the ``shutdown`` op)."""
+        if not self._shutdown_requested.is_set():
+            self._shutdown_requested.set()
+            threading.Thread(target=self.shutdown, daemon=True).start()
+
+    def close(self):
+        """Stop serving, drain the scheduler, persist the cache."""
+        self.server_close()
+        self.scheduler.shutdown(wait=True)
+        try:
+            os.unlink(self.socket_path)
+        except OSError:
+            pass
+
+    # context manager: `with PricingDaemon(...) as d:` serves in background
+    def __enter__(self):
+        self._thread = threading.Thread(target=self.serve_forever,
+                                        daemon=True)
+        self._thread.start()
+        return self
+
+    def __exit__(self, *exc):
+        self.shutdown()
+        self._thread.join(timeout=10)
+        self.close()
+        return False
+
+
+def serve(socket_path: str, **daemon_kw) -> None:
+    """Blocking entry point used by ``python -m repro.serve``."""
+    daemon = PricingDaemon(socket_path, **daemon_kw)
+    try:
+        daemon.serve_forever()
+    except KeyboardInterrupt:
+        pass
+    finally:
+        daemon.close()
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.serve",
+        description="long-lived analytical-pricing daemon")
+    ap.add_argument("--socket", default="/tmp/repro-serve.sock",
+                    help="Unix socket path (default %(default)s)")
+    ap.add_argument("--cache-path", default=None,
+                    help="persist the invariant cache here (warm restarts)")
+    ap.add_argument("--parallel", action="store_true",
+                    help="evaluate structural tasks in a worker pool")
+    ap.add_argument("--max-workers", type=int, default=None)
+    ap.add_argument("--cache-max-entries", type=int, default=None)
+    ap.add_argument("--cache-max-bytes", type=int, default=None)
+    ap.add_argument("--memo-entries", type=int, default=1024,
+                    help="result-memo LRU size (default %(default)s)")
+    args = ap.parse_args(argv)
+    engine = Explorer(parallel=args.parallel, max_workers=args.max_workers,
+                      cache_path=args.cache_path,
+                      cache_max_entries=args.cache_max_entries,
+                      cache_max_bytes=args.cache_max_bytes)
+    print(f"repro.serve: listening on {args.socket} "
+          f"(cache: {args.cache_path or 'in-memory'}, "
+          f"{engine.cache.loaded_entries} entries warm)")
+    serve(args.socket, engine=engine, memo_entries=args.memo_entries)
+    return 0
+
+
+# client availability probe used by tests/benches
+def can_bind_unix_sockets(tmpdir: str) -> bool:
+    path = os.path.join(tmpdir, "probe.sock")
+    try:
+        s = socket.socket(socket.AF_UNIX, socket.SOCK_STREAM)
+        s.bind(path)
+        s.close()
+        os.unlink(path)
+        return True
+    except OSError:
+        return False
+
+
+__all__ = ["PricingDaemon", "serve", "main", "can_bind_unix_sockets"]

@@ -1,0 +1,284 @@
+"""Request scheduler: dedupe, memoization, and sweep coalescing.
+
+The daemon's brain, usable in-process too.  Every submitted
+``PriceRequest`` is identified by its structural digest
+(``schema.request_digest``); the scheduler then guarantees each distinct
+digest is **priced at most once** while it stays memoized:
+
+  * **memo hit** — a digest priced before resolves immediately from an LRU
+    result memo (no engine work, no queue: this is the single-digit-ms warm
+    path the soak benchmark gates);
+  * **in-flight join** — a digest currently being priced attaches to the
+    existing computation's future instead of enqueueing again (concurrent
+    identical clients collapse structurally, the way suite lowering
+    collapses repeated cells);
+  * **coalesced sweep** — distinct queued requests with compatible sweep
+    parameters (same machines/top_k/strict/machine_axis/gpu_configs, no
+    suite plans) merge into ONE engine sweep under ``q<i>::`` workload
+    prefixes, then split back per request — sharing the invariant cache,
+    cell dedupe, and pool batching across clients.
+
+Counters make all of this observable (and gateable):
+``requests = memo_hits + dedupe_joins + keys_priced`` always holds.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import threading
+from collections import OrderedDict
+from concurrent.futures import Future
+
+from repro.api import PriceRequest, PriceResult, price
+from repro.core.engine import (
+    EvalResult,
+    ExplorationReport,
+    Explorer,
+    PrunedConfig,
+    SkippedConfig,
+)
+
+from .schema import encode, request_digest
+
+
+class _Memo:
+    """One memoized result + its lazily rendered wire text."""
+
+    __slots__ = ("result", "wire")
+
+    def __init__(self, result):
+        self.result = result
+        self.wire = None
+
+
+class _Pending:
+    """One in-flight digest: the request and every future joined to it."""
+
+    __slots__ = ("digest", "request", "futures")
+
+    def __init__(self, digest, request):
+        self.digest = digest
+        self.request = request
+        self.futures: list = []
+
+
+def _coalesce_key(request: PriceRequest):
+    """Requests sharing this key can merge into one sweep (suite plans are
+    already one sweep internally and keep their own fold, so they never
+    coalesce with others)."""
+    if request.plans:
+        return None
+    body = encode((request.machines, request.gpu_configs, request.top_k,
+                   request.strict, request.machine_axis))
+    return json.dumps(body, separators=(",", ":"), sort_keys=True)
+
+
+def _prefixed(request: PriceRequest, tag: str) -> PriceRequest:
+    return PriceRequest(
+        workloads=tuple(dataclasses.replace(w, name=f"{tag}{w.name}")
+                        for w in request.workloads),
+        traced=tuple(dataclasses.replace(t, name=f"{tag}{t.name}")
+                     for t in request.traced),
+        machines=request.machines, gpu_configs=request.gpu_configs,
+        top_k=request.top_k, strict=request.strict,
+        machine_axis=request.machine_axis,
+    )
+
+
+def _split_report(merged, tag: str) -> ExplorationReport:
+    """Extract one request's rows from a coalesced report, prefix stripped.
+
+    Estimates are the merged sweep's objects untouched — workload names are
+    labels, not pricing inputs (``_cell_signature`` never reads them), so
+    the split rows are bitwise identical to a solo sweep's.
+    """
+    n = len(tag)
+    out = ExplorationReport(
+        entries=[EvalResult(e.workload[n:], e.machine, e.backend, e.index,
+                            e.config, e.estimate, e.perf, e.limiter)
+                 for e in merged.entries if e.workload.startswith(tag)],
+        skipped=[SkippedConfig(s.workload[n:], s.machine, s.config, s.reason)
+                 for s in merged.skipped if s.workload.startswith(tag)],
+        pruned=[PrunedConfig(p.workload[n:], p.machine, p.config, p.bound,
+                             p.threshold)
+                for p in merged.pruned if p.workload.startswith(tag)],
+        cache_stats=dict(merged.cache_stats),
+        wall_time_s=merged.wall_time_s,
+    )
+    out.cache_stats["coalesced"] = True
+    return out
+
+
+class Scheduler:
+    """Thread-safe pricing scheduler over one shared ``Explorer``."""
+
+    def __init__(self, engine: Explorer | None = None, *,
+                 memo_entries: int = 1024, coalesce: bool = True):
+        self.engine = engine or Explorer()
+        self.memo_entries = memo_entries
+        self.coalesce = coalesce
+        self._memo: OrderedDict = OrderedDict()   # digest -> _Memo (LRU)
+        self._inflight: dict = {}                 # digest -> _Pending
+        self._queue: list = []                    # _Pending FIFO
+        self._lock = threading.Lock()
+        self._wake = threading.Condition(self._lock)
+        self._stop = False
+        self.counters = {
+            "requests": 0, "memo_hits": 0, "dedupe_joins": 0,
+            "keys_priced": 0, "errors": 0,
+            "coalesced_sweeps": 0, "coalesced_requests": 0,
+        }
+        self._worker = threading.Thread(target=self._run, name="repro-serve",
+                                        daemon=True)
+        self._worker.start()
+
+    # ---- client side ---------------------------------------------------
+    def submit(self, request: PriceRequest,
+               digest: str | None = None) -> Future:
+        """Queue one request; the future resolves to its ``PriceResult``."""
+        digest = digest or request_digest(request)
+        fut: Future = Future()
+        with self._wake:
+            if self._stop:
+                raise RuntimeError("scheduler is shut down")
+            self.counters["requests"] += 1
+            memo = self._memo.get(digest)
+            if memo is not None:
+                self.counters["memo_hits"] += 1
+                self._memo.move_to_end(digest)
+                fut.set_result(memo.result)
+                return fut
+            pending = self._inflight.get(digest)
+            if pending is not None:
+                self.counters["dedupe_joins"] += 1
+                pending.futures.append(fut)
+                return fut
+            pending = _Pending(digest, request)
+            pending.futures.append(fut)
+            self._inflight[digest] = pending
+            self._queue.append(pending)
+            self._wake.notify()
+        return fut
+
+    def price_now(self, request: PriceRequest,
+                  digest: str | None = None) -> PriceResult:
+        """Synchronous convenience: submit and wait."""
+        return self.submit(request, digest).result()
+
+    def encoded(self, digest: str, result: PriceResult) -> str:
+        """Wire text for one result, rendered once per memoized digest —
+        warm responses skip both the sweep AND re-serialization."""
+        with self._lock:
+            memo = self._memo.get(digest)
+            if memo is not None and memo.wire is not None:
+                return memo.wire
+        from .schema import dumps
+
+        wire = dumps(result)
+        with self._lock:
+            memo = self._memo.get(digest)
+            if memo is not None:
+                memo.wire = wire
+        return wire
+
+    def stats(self) -> dict:
+        with self._lock:
+            out = dict(self.counters)
+            out["memo_entries"] = len(self._memo)
+            out["inflight"] = len(self._inflight) + len(self._queue)
+        out["engine_cache"] = self.engine.cache.stats()
+        return out
+
+    def shutdown(self, wait: bool = True, timeout: float | None = None):
+        """Stop accepting work; drain what is queued, then exit the worker
+        and persist the engine's invariant cache."""
+        with self._wake:
+            self._stop = True
+            self._wake.notify_all()
+        if wait:
+            self._worker.join(timeout)
+        self.engine.save_cache()
+
+    # ---- worker side ---------------------------------------------------
+    def _run(self):
+        while True:
+            with self._wake:
+                while not self._queue and not self._stop:
+                    self._wake.wait()
+                if not self._queue and self._stop:
+                    return
+                batch, self._queue = self._queue, []
+            self._serve_batch(batch)
+
+    def _serve_batch(self, batch):
+        groups: dict = {}
+        solo: list = []
+        if self.coalesce and len(batch) > 1:
+            for p in batch:
+                key = _coalesce_key(p.request)
+                if key is None:
+                    solo.append(p)
+                else:
+                    groups.setdefault(key, []).append(p)
+            merged_groups = [g for g in groups.values() if len(g) > 1]
+            solo.extend(p for g in groups.values() if len(g) == 1 for p in g)
+        else:
+            merged_groups, solo = [], list(batch)
+        for group in merged_groups:
+            self._serve_coalesced(group)
+        for p in solo:
+            self._serve_one(p)
+
+    def _serve_one(self, pending):
+        try:
+            result = price(pending.request, engine=self.engine)
+        except BaseException as exc:
+            self._resolve(pending, None, exc)
+        else:
+            self._resolve(pending, result, None)
+
+    def _serve_coalesced(self, group):
+        tmpl = group[0].request
+        merged_request = PriceRequest(
+            workloads=tuple(
+                w for i, p in enumerate(group)
+                for w in _prefixed(p.request, f"q{i}::").workloads),
+            traced=tuple(
+                t for i, p in enumerate(group)
+                for t in _prefixed(p.request, f"q{i}::").traced),
+            machines=tmpl.machines, gpu_configs=tmpl.gpu_configs,
+            top_k=tmpl.top_k, strict=tmpl.strict,
+            machine_axis=tmpl.machine_axis,
+        )
+        try:
+            merged = price(merged_request, engine=self.engine)
+        except BaseException as exc:
+            for p in group:
+                self._resolve(p, None, exc)
+            return
+        with self._lock:
+            self.counters["coalesced_sweeps"] += 1
+            self.counters["coalesced_requests"] += len(group)
+        for i, p in enumerate(group):
+            report = _split_report(merged.report, f"q{i}::")
+            self._resolve(p, PriceResult(report=report), None)
+
+    def _resolve(self, pending, result, exc):
+        with self._lock:
+            self._inflight.pop(pending.digest, None)
+            if exc is None:
+                self.counters["keys_priced"] += 1
+                self._memo[pending.digest] = _Memo(result)
+                while len(self._memo) > self.memo_entries:
+                    self._memo.popitem(last=False)
+            else:
+                self.counters["keys_priced"] += 1
+                self.counters["errors"] += 1
+        for fut in pending.futures:
+            if exc is None:
+                fut.set_result(result)
+            else:
+                fut.set_exception(exc)
+
+
+__all__ = ["Scheduler"]

@@ -4,16 +4,14 @@ The paper's closing claim — the estimator integrates with *any* code
 generator that can produce address expressions — applied to the model-config
 zoo: ``lower_model`` decomposes a ``repro.configs`` architecture into a
 ``ModelPlan`` of kernel workloads (attention cores, projection/MoE/SSM
-GEMMs), and ``price_plans`` prices whole batches of plans across GPU and TPU
-machines in one exploration-engine sweep.  See DESIGN.md §8 for the lowering
-contract.
+GEMMs), and whole batches of plans are priced across GPU and TPU machines
+in one exploration-engine sweep through ``repro.api``.  See DESIGN.md §8
+for the lowering contract.
 
-    from repro.configs import get_config
-    from repro.suite import lower_model, price_plans
-    from repro.core.machines import A100, TPU_V5E, V100
+    from repro.api import PlanRef, plan_request, price
 
-    plan = lower_model(get_config("mixtral-8x7b"), "train_4k")
-    suite = price_plans({"mixtral-8x7b": plan}, [V100, A100, TPU_V5E])
+    suite = price(plan_request({"mixtral-8x7b": PlanRef("mixtral-8x7b")},
+                               ["V100", "A100", "TPUv5e"])).suite
     print(suite.table())
 """
 from .lowering import (
@@ -31,11 +29,12 @@ from .report import (
     WorkloadPricing,
     machine_kind,
     price_plans,
+    suite_from_report,
 )
 
 __all__ = [
     "KernelWorkload", "ModelPlan", "lower_model", "lower_all",
     "pad_tile", "suite_gpu_configs", "SUITE_GPU_BLOCKS",
     "ModelReport", "SuiteReport", "WorkloadPricing",
-    "machine_kind", "price_plans",
+    "machine_kind", "price_plans", "suite_from_report",
 ]

@@ -15,6 +15,7 @@ across types it compares the two analytical models' predictions.
 from __future__ import annotations
 
 import time
+import warnings
 from dataclasses import dataclass, field as dc_field
 
 from repro.core.engine import Explorer
@@ -96,14 +97,17 @@ class ModelReport:
         return out
 
     def to_row(self) -> dict:
+        # normalized summary row: raw SI units throughout ("flops",
+        # "hbm_bytes"), same field names the engine's EvalResult/roofline
+        # vocabulary uses — unit scaling belongs to presentation layers
         rf = self.roofline
         return {
             "model": self.model,
             "shape": self.shape,
             "machine": self.machine,
             "time_s": self.time_s,
-            "gflops": self.flops / 1e9,
-            "hbm_GB": self.hbm_bytes / 1e9,
+            "flops": self.flops,
+            "hbm_bytes": self.hbm_bytes,
             "dominant": rf.dominant if rf else "n/a",
             "roofline_fraction": self.roofline_fraction,
             "limiters": self.limiter_counts(),
@@ -162,13 +166,34 @@ class SuiteReport:
         return "\n".join(lines)
 
     def to_json(self) -> dict:
+        """Versioned summary view (the shape BENCH_model_suite.json carries);
+        ``to_wire``/``from_wire`` give the exact round-trippable form."""
+        from repro.serve.schema import SCHEMA_VERSION
+
         return {
+            "schema": {"kind": "suite_report", "version": SCHEMA_VERSION},
             "cells": [r.to_row() for r in self.reports.values()],
             "ranking": {m: [(name, t) for name, t in self.machine_ranking(m)]
                         for m in self.models()},
             "cache_stats": dict(self.cache_stats),
             "wall_time_s": self.wall_time_s,
         }
+
+    def to_wire(self) -> dict:
+        """Exact, versioned JSON-safe form (repro.serve.schema codec)."""
+        from repro.serve.schema import encode
+
+        return encode(self)
+
+    @classmethod
+    def from_wire(cls, obj) -> "SuiteReport":
+        from repro.serve.schema import decode
+
+        out = decode(obj)
+        if not isinstance(out, cls):
+            raise TypeError(f"wire object decodes to {type(out).__name__}, "
+                            f"not {cls.__name__}")
+        return out
 
 
 # ==========================================================================
@@ -209,30 +234,16 @@ def _price_row(wl, entry, kind) -> WorkloadPricing:
     )
 
 
-def price_plans(plans: dict, machines, *, explorer: Explorer | None = None,
-                gpu_configs=None, strict: bool = False,
-                top_k: int | None = None, progress=None) -> SuiteReport:
-    """Price ``{name: ModelPlan}`` on every machine in one engine sweep.
+def suite_from_report(plans: dict, machines, report) -> SuiteReport:
+    """Fold one engine ``ExplorationReport`` (plan workloads namespaced as
+    ``"<model>::<workload>"``) into per-(model, machine) ``ModelReport``s.
 
-    ``top_k`` switches the sweep to the engine's tiered bound-then-refine
-    search (the suite only consumes each cell's best config, so ``top_k=1``
-    yields identical reports while skipping most structural work on fresh
-    caches); ``progress(done, total)`` observes per-config completion.
-    Pass ``explorer=Explorer(parallel=True, cache_path=...)`` to persist the
-    invariant cache across runs — a warm re-run of the whole suite then
-    skips essentially all structural evaluation.
+    Shared by the in-process path (``_price_plans``) and ``repro.api.price``
+    — a daemon sweep that mixed suite plans with other requests folds the
+    same way, reading only its own namespaced entries.
     """
-    t0 = time.perf_counter()
-    explorer = explorer or Explorer(parallel=True)
-    gpu_configs = gpu_configs or suite_gpu_configs()
-    engine_plans = {
-        name: plan.engine_workloads(gpu_configs)
-        for name, plan in plans.items()
-    }
-    report = explorer.explore_plans(engine_plans, machines, strict=strict,
-                                    top_k=top_k, progress=progress)
-
-    suite = SuiteReport(cache_stats=dict(report.cache_stats))
+    suite = SuiteReport(cache_stats=dict(report.cache_stats),
+                        wall_time_s=report.wall_time_s)
     # index entries/skips once: (workload name, machine) -> best entry
     best: dict = {}
     for e in report.entries:
@@ -261,5 +272,46 @@ def price_plans(plans: dict, machines, *, explorer: Explorer | None = None,
                 f"{name}/{plan.shape.name}/{machine.name}",
                 machine, mr.flops, mr.hbm_bytes)
             suite.reports[(name, machine.name)] = mr
+    return suite
+
+
+def _price_plans(plans: dict, machines, *, explorer: Explorer | None = None,
+                 gpu_configs=None, strict: bool = False,
+                 top_k: int | None = None, progress=None) -> SuiteReport:
+    """Price ``{name: ModelPlan}`` on every machine in one engine sweep.
+
+    ``top_k`` switches the sweep to the engine's tiered bound-then-refine
+    search (the suite only consumes each cell's best config, so ``top_k=1``
+    yields identical reports while skipping most structural work on fresh
+    caches); ``progress(done, total)`` observes per-config completion.
+    Pass ``explorer=Explorer(parallel=True, cache_path=...)`` to persist the
+    invariant cache across runs — a warm re-run of the whole suite then
+    skips essentially all structural evaluation.
+    """
+    t0 = time.perf_counter()
+    explorer = explorer or Explorer(parallel=True)
+    gpu_configs = gpu_configs or suite_gpu_configs()
+    engine_plans = {
+        name: plan.engine_workloads(gpu_configs)
+        for name, plan in plans.items()
+    }
+    report = explorer._explore_plans(engine_plans, machines, strict=strict,
+                                     top_k=top_k, progress=progress)
+    suite = suite_from_report(plans, machines, report)
+    # wall time covers lowering + folding, not just the engine sweep
     suite.wall_time_s = time.perf_counter() - t0
     return suite
+
+
+def price_plans(plans: dict, machines, *, explorer: Explorer | None = None,
+                gpu_configs=None, strict: bool = False,
+                top_k: int | None = None, progress=None) -> SuiteReport:
+    """Deprecated: use ``repro.api.price(plan_request(...))``."""
+    warnings.warn(
+        "price_plans() is deprecated; use repro.api.price("
+        "repro.api.plan_request(...)) instead",
+        DeprecationWarning, stacklevel=2,
+    )
+    return _price_plans(plans, machines, explorer=explorer,
+                        gpu_configs=gpu_configs, strict=strict, top_k=top_k,
+                        progress=progress)

@@ -1,0 +1,286 @@
+"""The unified ``repro.api`` facade (DESIGN.md §12).
+
+Three contracts: every legacy entry point's answer is **bitwise identical**
+through ``price(request)``; every legacy signature still works but emits a
+``DeprecationWarning``; requests and results round-trip exactly through the
+versioned ``repro.serve.schema`` codec (the same one the daemon speaks).
+"""
+import dataclasses
+
+import pytest
+from hypothesis_compat import given, settings, st
+
+from repro.api import (
+    API_VERSION,
+    PlanRef,
+    PriceRequest,
+    gpu_request,
+    kernel_request,
+    pallas_request,
+    plan_request,
+    price,
+)
+from repro.configs import get_config
+from repro.core.access import LaunchConfig
+from repro.core.engine import Explorer, Workload
+from repro.core.machines import A100, TPU_V5E, GPUMachine, get_machine
+from repro.core.specs import star_stencil_3d
+from repro.kernels import get_generator
+from repro.serve.schema import SCHEMA_VERSION, decode, dumps, encode, loads, request_digest
+from repro.suite import lower_model, price_plans
+
+SMALL = GPUMachine(
+    name="A100/8", n_sms=13, clock_hz=1.41e9, l1_bytes=192 * 1024,
+    l2_bytes=20 * 1024 * 1024 // 8, dram_bw=1400e9 / 8, l2_bw=5000e9 / 8,
+    peak_flops_dp=9.7e12 / 8,
+)
+SPEC = star_stencil_3d(r=2, domain=(24, 32, 64))
+CONFIGS = [LaunchConfig(block=b, folding=f)
+           for b in [(64, 4, 2), (32, 4, 4), (16, 8, 4), (8, 8, 8)]
+           for f in [(1, 1, 1), (1, 1, 2)]]
+
+
+def _entry_key(e):
+    """Everything an entry carries, for bitwise comparison."""
+    return (e.workload, e.machine, e.backend, e.index, e.config,
+            e.estimate, e.perf, e.limiter)
+
+
+def _report_keys(report):
+    return ([_entry_key(e) for e in report.entries],
+            [(s.workload, s.machine, s.config, s.reason)
+             for s in report.skipped],
+            [(p.workload, p.machine, p.config, p.bound, p.threshold)
+             for p in report.pruned])
+
+
+# ========================================================================
+# bitwise parity: api vs every legacy entry point
+# ========================================================================
+def test_gpu_request_bitwise_matches_rank_gpu():
+    legacy = Explorer()._rank_gpu(SPEC, SMALL, CONFIGS)
+    result = price(gpu_request(SPEC, SMALL, CONFIGS))
+    assert _report_keys(result.report) == _report_keys(legacy)
+    assert result.suite is None
+
+
+def test_gpu_request_top_k_bitwise_matches_rank_gpu():
+    legacy = Explorer()._rank_gpu(SPEC, SMALL, CONFIGS, top_k=3)
+    result = price(gpu_request(SPEC, SMALL, CONFIGS, top_k=3))
+    assert _report_keys(result.report) == _report_keys(legacy)
+
+
+def test_pallas_request_bitwise_matches_rank_pallas():
+    cands = list(get_generator("matmul")(128, 128, 128))
+    legacy = Explorer()._rank_pallas(cands, TPU_V5E)
+    result = price(pallas_request(cands, TPU_V5E))
+    assert _report_keys(result.report) == _report_keys(legacy)
+
+
+def test_plain_request_bitwise_matches_explore():
+    cands = list(get_generator("matmul")(128, 128, 128))
+    workloads = [
+        Workload(name="stencil", gpu_spec=SPEC, gpu_configs=CONFIGS),
+        Workload(name="mm", tpu_candidates=cands),
+    ]
+    legacy = Explorer()._explore(workloads, [SMALL, TPU_V5E])
+    result = price(PriceRequest(workloads=workloads,
+                                machines=[SMALL, TPU_V5E]))
+    assert _report_keys(result.report) == _report_keys(legacy)
+
+
+def test_plan_request_bitwise_matches_price_plans():
+    plan = lower_model(get_config("whisper-base"), "train_4k")
+    with pytest.warns(DeprecationWarning):
+        legacy = price_plans({"whisper": plan}, [SMALL, TPU_V5E],
+                             explorer=Explorer(parallel=False))
+    suite = price(plan_request({"whisper": plan}, [SMALL, TPU_V5E]),
+                  engine=Explorer(parallel=False)).suite
+    assert suite is not None
+    for m in (SMALL.name, TPU_V5E.name):
+        a, b = suite.get("whisper", m), legacy.get("whisper", m)
+        assert [dataclasses.astuple(r) for r in a.rows] == \
+            [dataclasses.astuple(r) for r in b.rows]
+        assert a.time_s == b.time_s
+    assert suite.machine_ranking("whisper") == \
+        legacy.machine_ranking("whisper")
+
+
+def test_plan_ref_resolves_like_inline_plan():
+    plan = lower_model(get_config("whisper-base"), "train_4k")
+    inline = price(plan_request({"w": plan}, [TPU_V5E])).suite
+    by_ref = price(plan_request({"w": PlanRef("whisper-base", "train_4k")},
+                                [TPU_V5E])).suite
+    assert inline.machine_ranking("w") == by_ref.machine_ranking("w")
+    assert [dataclasses.astuple(r)
+            for r in inline.get("w", TPU_V5E.name).rows] == \
+        [dataclasses.astuple(r) for r in by_ref.get("w", TPU_V5E.name).rows]
+
+
+def test_kernel_request_matches_price_kernel():
+    jax = pytest.importorskip("jax")
+    import jax.numpy as jnp
+    from jax.experimental import pallas as pl
+
+    from repro.frontend import arg, price_kernel
+
+    def call(x):
+        def kernel(x_ref, o_ref):
+            o_ref[...] = x_ref[...] * 2.0
+
+        return pl.pallas_call(
+            kernel, grid=(4,),
+            in_specs=[pl.BlockSpec((8, 32), lambda i: (i, 0))],
+            out_specs=pl.BlockSpec((8, 32), lambda i: (i, 0)),
+            out_shape=jax.ShapeDtypeStruct((32, 32), jnp.float32),
+            interpret=True)(x)
+
+    args = [arg("x", (32, 32), jnp.float32)]
+    with pytest.warns(DeprecationWarning):
+        legacy = price_kernel(call, args, machines=[SMALL, TPU_V5E],
+                              name="scale2")
+    result = price(kernel_request(call, args, [SMALL, TPU_V5E],
+                                  name="scale2"))
+    assert _report_keys(result.report) == _report_keys(legacy)
+    assert {e.machine for e in result.entries} == {SMALL.name, TPU_V5E.name}
+
+
+# ========================================================================
+# the shims still work — and say so
+# ========================================================================
+def test_every_legacy_entry_point_warns():
+    cands = list(get_generator("matmul")(128, 128, 128))
+    ex = Explorer()
+    with pytest.warns(DeprecationWarning, match="rank_gpu"):
+        ex.rank_gpu(SPEC, SMALL, CONFIGS[:2])
+    with pytest.warns(DeprecationWarning, match="rank_pallas"):
+        ex.rank_pallas(cands, TPU_V5E)
+    with pytest.warns(DeprecationWarning, match="explore"):
+        ex.explore([Workload(name="mm", tpu_candidates=cands)], [TPU_V5E])
+    with pytest.warns(DeprecationWarning, match="explore_plans"):
+        ex.explore_plans({"p": [Workload(name="mm", tpu_candidates=cands)]},
+                         [TPU_V5E])
+
+
+def test_legacy_shim_answers_match_private_paths():
+    ex, ex2 = Explorer(), Explorer()
+    with pytest.warns(DeprecationWarning):
+        shim = ex.rank_gpu(SPEC, SMALL, CONFIGS)
+    assert _report_keys(shim) == _report_keys(
+        ex2._rank_gpu(SPEC, SMALL, CONFIGS))
+
+
+# ========================================================================
+# request semantics
+# ========================================================================
+def test_machine_names_resolve_to_registry_objects():
+    by_obj = price(gpu_request(SPEC, A100, CONFIGS))
+    by_name = price(gpu_request(SPEC, "A100-SXM4-40G", CONFIGS))
+    short = price(gpu_request(SPEC, "A100", CONFIGS))
+    assert _report_keys(by_name.report) == _report_keys(by_obj.report)
+    assert _report_keys(short.report) == _report_keys(by_obj.report)
+    with pytest.raises(KeyError, match="unknown machine"):
+        get_machine("nope")
+
+
+def test_request_gpu_configs_fill_config_less_workloads():
+    explicit = price(PriceRequest(
+        workloads=[Workload(name="s", gpu_spec=SPEC, gpu_configs=CONFIGS)],
+        machines=[SMALL]))
+    filled = price(PriceRequest(workloads=[Workload(name="s", gpu_spec=SPEC)],
+                                machines=[SMALL], gpu_configs=CONFIGS))
+    assert _report_keys(filled.report) == _report_keys(explicit.report)
+
+
+def test_bare_spec_promotes_to_workload():
+    result = price(PriceRequest(workloads=[SPEC], machines=[SMALL],
+                                gpu_configs=CONFIGS))
+    assert {e.workload for e in result.entries} == {SPEC.name}
+
+
+def test_future_request_version_rejected():
+    req = dataclasses.replace(gpu_request(SPEC, SMALL, CONFIGS),
+                              version=API_VERSION + 1)
+    with pytest.raises(ValueError, match="newer than"):
+        price(req)
+
+
+# ========================================================================
+# round-trip serialization (the daemon's wire form)
+# ========================================================================
+def test_request_round_trips_exactly():
+    for req in (
+        gpu_request(SPEC, SMALL, CONFIGS, top_k=3),
+        pallas_request(list(get_generator("matmul")(128, 128, 128))),
+        plan_request({"w": PlanRef("whisper-base")}, ["TPUv5e"]),
+        PriceRequest(workloads=[Workload(name="s", gpu_spec=SPEC)],
+                     machines=["A100"], gpu_configs=CONFIGS,
+                     strict=True, machine_axis=True),
+    ):
+        back = decode(encode(req))
+        assert back == req
+        assert request_digest(back) == request_digest(req)
+
+
+def test_result_round_trips_exactly():
+    result = price(gpu_request(SPEC, SMALL, CONFIGS, top_k=3))
+    back = loads(dumps(result))
+    assert _report_keys(back.report) == _report_keys(result.report)
+    assert back.cache_stats == result.cache_stats
+    assert back.version == result.version
+
+
+def test_suite_report_round_trips_through_wire():
+    plan = lower_model(get_config("whisper-base"), "train_4k")
+    suite = price(plan_request({"w": plan}, [TPU_V5E])).suite
+    back = type(suite).from_wire(suite.to_wire())
+    assert back.machine_ranking("w") == suite.machine_ranking("w")
+    assert [dataclasses.astuple(r) for r in back.get("w", TPU_V5E.name).rows] \
+        == [dataclasses.astuple(r) for r in suite.get("w", TPU_V5E.name).rows]
+    assert back.to_json() == suite.to_json()
+
+
+def test_suite_to_json_is_versioned():
+    plan = lower_model(get_config("whisper-base"), "train_4k")
+    suite = price(plan_request({"w": plan}, [TPU_V5E])).suite
+    payload = suite.to_json()
+    assert payload["schema"] == {"kind": "suite_report",
+                                 "version": SCHEMA_VERSION}
+    assert {"cells", "ranking", "cache_stats", "wall_time_s"} <= set(payload)
+    cell = payload["cells"][0]
+    assert "flops" in cell and "hbm_bytes" in cell   # raw units, not scaled
+
+
+def test_digest_is_structural_not_positional():
+    a = gpu_request(SPEC, SMALL, CONFIGS, top_k=3)
+    b = gpu_request(star_stencil_3d(r=2, domain=(24, 32, 64)), SMALL,
+                    list(CONFIGS), top_k=3)
+    assert a == b and request_digest(a) == request_digest(b)
+    assert request_digest(a) != request_digest(
+        gpu_request(SPEC, SMALL, CONFIGS, top_k=4))
+
+
+def test_wire_envelope_rejects_other_versions():
+    text = dumps(gpu_request(SPEC, SMALL, CONFIGS))
+    import json
+
+    env = json.loads(text)
+    assert env["schema_version"] == SCHEMA_VERSION
+    env["schema_version"] = SCHEMA_VERSION + 1
+    with pytest.raises(ValueError, match="schema version"):
+        loads(json.dumps(env))
+
+
+@given(st.integers(min_value=1, max_value=64),
+       st.booleans(), st.booleans(),
+       st.sampled_from(["A100", "V100", "H100", "TPUv5e"]))
+@settings(max_examples=25, deadline=None)
+def test_request_round_trip_property(top_k, strict, machine_axis, machine):
+    req = PriceRequest(
+        workloads=[Workload(name=f"w{top_k}", gpu_spec=SPEC,
+                            gpu_configs=CONFIGS)],
+        machines=[machine], top_k=top_k, strict=strict,
+        machine_axis=machine_axis)
+    back = decode(encode(req))
+    assert back == req
+    assert request_digest(back) == request_digest(req)
