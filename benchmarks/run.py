@@ -25,6 +25,7 @@ MODULES = [
     "bench_design_space",     # DESIGN §11 geometry-factored machine-axis sweep
     "bench_trace_extract",    # DESIGN §9 spec-extraction frontend parity/cost
     "bench_serve_soak",       # DESIGN §12 daemon warm latency + dedupe
+    "bench_chaos_soak",       # DESIGN §13 failure model under fault injection
     "bench_roofline",         # §Roofline table (reads experiments/dryrun)
 ]
 

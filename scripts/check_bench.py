@@ -203,6 +203,24 @@ def check_serve_soak(gate: Gate, base: dict, cur: dict, slack: float):
                slack * 4.0, higher_is_better=False)
 
 
+def check_chaos_soak(gate: Gate, base: dict, cur: dict, slack: float):
+    # the failure-model contract (DESIGN.md §13) is all-boolean and
+    # deterministic: under the standard fault plan every request completes
+    # bitwise-identically or explicitly degraded — never wrong, never hung
+    for flag in ("cache_quarantined", "cache_reprice_identical",
+                 "cache_rebuilt", "daemon_alive", "all_match_or_degraded",
+                 "deadline_degraded", "counters_consistent",
+                 "faults_exercised", "pool_recovery_identical"):
+        gate.equal(f"chaos_soak: {flag}", True, bool(cur[flag]))
+    gate.equal("chaos_soak: zero hung requests", 0, cur["hung_requests"])
+    gate.equal("chaos_soak: zero quarantined tasks", 0,
+               cur["quarantined_tasks"])
+    gate.equal("chaos_soak: storm result count", base["n_results"],
+               cur["n_results"])
+    gate.equal("chaos_soak: worker-crash recovery actually recovered",
+               True, cur["pool_recovery_rebuilds"] >= 1)
+
+
 CHECKS = {
     "perf_ranking": check_perf_ranking,
     "pruned_search": check_pruned_search,
@@ -211,6 +229,7 @@ CHECKS = {
     "trace_extract": check_trace_extract,
     "cachesim_core": check_cachesim_core,
     "serve_soak": check_serve_soak,
+    "chaos_soak": check_chaos_soak,
 }
 
 
@@ -218,12 +237,23 @@ def main() -> int:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--baseline", default="benchmarks/baselines")
     ap.add_argument("--current", required=True)
+    ap.add_argument("--only", default=None,
+                    help="comma-separated bench names to gate (default all; "
+                         "lets a job that ran one bench skip the rest)")
     args = ap.parse_args()
     slack = float(os.environ.get("BENCH_GATE_SLACK", "1.0"))
+    selected = dict(CHECKS)
+    if args.only:
+        names = [n.strip() for n in args.only.split(",") if n.strip()]
+        unknown = [n for n in names if n not in CHECKS]
+        if unknown:
+            print(f"FAIL: unknown bench names in --only: {unknown}")
+            return 1
+        selected = {n: CHECKS[n] for n in names}
 
     gate = Gate()
     compared = 0
-    for name, fn in CHECKS.items():
+    for name, fn in selected.items():
         base = load(args.baseline, name)
         cur = load(args.current, name)
         if base is None:

@@ -103,11 +103,17 @@ class PriceResult:
     The common report accessors are re-exported so most callers never reach
     inside: ``result.ranking(workload, machine)``, ``result.best(...)``,
     ``result.cache_stats`` ...
+
+    ``degraded=True`` marks a graceful-degradation answer (``price_bounds``,
+    or a ``repro.serve`` deadline fallback): the ranking orders configs by
+    their sound closed-form lower bound, not the exact model — callers that
+    need the exact ranking must re-ask without a deadline.
     """
 
     report: Any
     suite: Any = None
     version: int = API_VERSION
+    degraded: bool = False
 
     # ---- report passthrough --------------------------------------------
     @property
@@ -213,24 +219,16 @@ def _resolve_plan(plan):
     return plan.resolve() if isinstance(plan, PlanRef) else plan
 
 
-def price(request: PriceRequest, *, engine: Explorer | None = None,
-          progress=None) -> PriceResult:
-    """Answer one ``PriceRequest`` in a single engine sweep.
-
-    Workloads, traced kernels, and every suite plan's lowered kernels run
-    through ONE ``Explorer`` sweep — sharing the invariant cache, cell-level
-    dedupe, and (with ``machine_axis``) geometry batching — then suite plans
-    fold their namespaced entries into ``result.suite``.  ``engine`` lets a
-    long-lived caller (the ``repro.serve`` daemon, a warm notebook) reuse
-    one Explorer across requests.
-    """
+def _check_version(request: PriceRequest) -> None:
     if request.version > API_VERSION:
         raise ValueError(
             f"request version {request.version} is newer than this "
             f"library's API_VERSION {API_VERSION}")
-    explorer = engine or Explorer()
-    machines = [_resolve_machine(m) for m in request.machines]
 
+
+def _request_workloads(request: PriceRequest):
+    """Lower a request to its engine workload list (shared by ``price`` and
+    ``price_bounds`` so both answer literally the same question)."""
     workloads = [
         w if isinstance(w, Workload) else Workload(name=w.name, gpu_spec=w)
         for w in request.workloads
@@ -248,7 +246,7 @@ def price(request: PriceRequest, *, engine: Explorer | None = None,
 
     plans = {name: _resolve_plan(p) for name, p in request.plans}
     if plans:
-        from repro.suite import suite_from_report, suite_gpu_configs
+        from repro.suite import suite_gpu_configs
 
         gpu_configs = (list(request.gpu_configs)
                        if request.gpu_configs is not None
@@ -257,16 +255,59 @@ def price(request: PriceRequest, *, engine: Explorer | None = None,
             for w in plan.engine_workloads(gpu_configs):
                 workloads.append(
                     dataclasses.replace(w, name=f"{name}::{w.name}"))
+    return workloads, plans
+
+
+def price(request: PriceRequest, *, engine: Explorer | None = None,
+          progress=None) -> PriceResult:
+    """Answer one ``PriceRequest`` in a single engine sweep.
+
+    Workloads, traced kernels, and every suite plan's lowered kernels run
+    through ONE ``Explorer`` sweep — sharing the invariant cache, cell-level
+    dedupe, and (with ``machine_axis``) geometry batching — then suite plans
+    fold their namespaced entries into ``result.suite``.  ``engine`` lets a
+    long-lived caller (the ``repro.serve`` daemon, a warm notebook) reuse
+    one Explorer across requests.
+    """
+    _check_version(request)
+    explorer = engine or Explorer()
+    machines = [_resolve_machine(m) for m in request.machines]
+    workloads, plans = _request_workloads(request)
 
     report = explorer._explore(workloads, machines, strict=request.strict,
                                top_k=request.top_k, progress=progress,
                                machine_axis=request.machine_axis)
-    suite = suite_from_report(plans, machines, report) if plans else None
+    if plans:
+        from repro.suite import suite_from_report
+
+        suite = suite_from_report(plans, machines, report)
+    else:
+        suite = None
     return PriceResult(report=report, suite=suite)
+
+
+def price_bounds(request: PriceRequest, *,
+                 engine: Explorer | None = None) -> PriceResult:
+    """Answer a request with the tier-1 closed-form bound ranking only.
+
+    This is the graceful-degradation path (DESIGN.md §13): it evaluates
+    each backend's cheap bound tasks — no grid walks, no wave model, no
+    worker pool — and ranks configurations by their sound lower bound on
+    primary time.  Orders of magnitude cheaper than ``price`` and safe to
+    serve when a deadline would otherwise be blown.  The result is flagged
+    ``degraded=True``: the order is a bound ranking, not the exact one, and
+    suite folding is skipped (no exact estimates exist to fold).
+    """
+    _check_version(request)
+    explorer = engine or Explorer()
+    machines = [_resolve_machine(m) for m in request.machines]
+    workloads, _ = _request_workloads(request)
+    report = explorer.bound_rank(workloads, machines, top_k=request.top_k)
+    return PriceResult(report=report, degraded=True)
 
 
 __all__ = [
     "API_VERSION", "PlanRef", "PriceRequest", "PriceResult",
     "gpu_request", "pallas_request", "plan_request", "kernel_request",
-    "price",
+    "price", "price_bounds",
 ]

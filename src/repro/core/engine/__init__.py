@@ -22,7 +22,7 @@ protocol contract backends implement.
 from .backends import GPUBackend, PallasBackend
 from .explorer import Explorer, Workload
 from .invariants import ENGINE_CACHE_VERSION, InvariantCache
-from .pool import TaskPool, default_workers, run_tasks
+from .pool import PoisonTaskError, TaskPool, default_workers, run_tasks
 from .protocol import (
     Estimator,
     EvalResult,
@@ -38,7 +38,7 @@ __all__ = [
     "Explorer", "Workload",
     "GPUBackend", "PallasBackend",
     "InvariantCache", "ENGINE_CACHE_VERSION",
-    "TaskPool", "run_tasks", "default_workers",
+    "TaskPool", "PoisonTaskError", "run_tasks", "default_workers",
     "Estimator", "EvalResult", "ExplorationReport",
     "SkipConfig", "SkippedConfig", "PrunedConfig", "RejectedSpec", "Task",
 ]

@@ -44,7 +44,7 @@ from ..gridwalk import core_stats_snapshot
 from ..machines import GPUMachine, TPUMachine, TPU_V5E
 from .backends import GPUBackend, PallasBackend
 from .invariants import InvariantCache
-from .pool import TaskPool
+from .pool import TaskPool, guarded_call
 from .protocol import (
     EvalResult,
     ExplorationReport,
@@ -349,6 +349,18 @@ class Explorer:
             for w in _as_list(workloads)
         ]
         machines = _as_list(machines)
+        cells, undefined = self._build_cells(workloads, machines, configs)
+        report = self._sweep(cells, strict=strict, top_k=top_k,
+                             progress=progress, machine_axis=machine_axis)
+        for w, m, reason in undefined:
+            report.skipped.append(
+                SkippedConfig(w.name, m.name, None, reason))
+        return report
+
+    @staticmethod
+    def _build_cells(workloads, machines, configs=None):
+        """Expand (workload, machine) pairs into sweep cells, collecting
+        pairs with no applicable backend/candidates as skip records."""
         cells, undefined = [], []
         for w in workloads:
             for m in machines:
@@ -380,11 +392,84 @@ class Explorer:
                     undefined.append(
                         (w, m, f"no backend for machine type "
                                f"{type(m).__name__}"))
-        report = self._sweep(cells, strict=strict, top_k=top_k,
-                             progress=progress, machine_axis=machine_axis)
+        return cells, undefined
+
+    # ---- graceful degradation: bound-only ranking (DESIGN.md §13) -------
+    def bound_rank(self, workloads, machines, *, top_k: int | None = None,
+                   configs=None) -> ExplorationReport:
+        """Rank every cell by its tier-1 closed-form bound only.
+
+        The degradation path for deadline-bound service requests: evaluates
+        just the cheap bound tasks (cache-shared with full sweeps — a warm
+        cache makes this near-free) and orders configurations by their
+        sound lower bound on primary time.  No grid walks, no wave model,
+        no worker pool.  Entries carry ``estimate=None``, ``perf=1/bound``
+        and ``limiter="bound"`` so they cannot be mistaken for exact
+        results; cells whose backend has no bound protocol are recorded as
+        skips rather than guessed at.
+        """
+        workloads = [
+            w if isinstance(w, Workload) else Workload(name=w.name, gpu_spec=w)
+            for w in _as_list(workloads)
+        ]
+        machines = _as_list(machines)
+        cells, undefined = self._build_cells(workloads, machines, configs)
+        with self._sweep_lock:
+            report = self._bound_sweep(cells, top_k)
         for w, m, reason in undefined:
             report.skipped.append(
                 SkippedConfig(w.name, m.name, None, reason))
+        return report
+
+    def _bound_sweep(self, cells, top_k) -> ExplorationReport:
+        t0 = time.perf_counter()
+        hits0, misses0 = self.cache.hits, self.cache.misses
+        report = ExplorationReport()
+        evals = 0
+        with self.cache.hold():
+            for wname, backend, items, machine in cells:
+                if not _prunable(backend):
+                    report.skipped.append(SkippedConfig(
+                        wname, machine.name, None,
+                        "degraded pricing: backend has no closed-form "
+                        "bound protocol"))
+                    continue
+                rows = []
+                for idx, item in enumerate(items):
+                    tasks = backend.bound_tasks(item, machine)
+                    for t in tasks:
+                        if self.cache.lookup(t.key) is None:
+                            self.cache.store(t.key,
+                                             guarded_call(t.fn, t.args))
+                            evals += 1
+                    values: dict = {}
+                    err = self._read_values(tasks, values, strict=False)
+                    if err is not None:
+                        report.skipped.append(SkippedConfig(
+                            wname, machine.name, _item_config(item),
+                            f"{type(err).__name__}: {err}"))
+                        continue
+                    bound = backend.tier_bound(item, machine, values)
+                    rows.append((bound, idx, item))
+                # best (lowest) bound first; index breaks ties exactly like
+                # the exhaustive ranking's stable sort
+                rows.sort(key=lambda r: (r[0], r[1]))
+                if top_k is not None:
+                    rows = rows[:top_k]
+                for bound, idx, item in rows:
+                    report.entries.append(EvalResult(
+                        workload=wname, machine=machine.name,
+                        backend=backend.name, index=idx,
+                        config=_item_config(item), estimate=None,
+                        perf=1.0 / max(bound, 1e-30), limiter="bound"))
+        report.cache_stats = {
+            "degraded": True,
+            "bound_evals": evals,
+            "hits": self.cache.hits - hits0,
+            "misses": self.cache.misses - misses0,
+        }
+        report.wall_time_s = time.perf_counter() - t0
+        self.save_cache()
         return report
 
     def _explore_plans(self, plans, machines, *,
@@ -543,6 +628,11 @@ class Explorer:
         for k in ("geometry_groups", "machines_batched", "geometry_share"):
             if k in stats:
                 report.cache_stats[k] = stats[k]
+        # self-healing pool events (rebuilds after crashed/hung workers,
+        # quarantined tasks) surface on the report so service callers can
+        # alert; absent on every healthy sweep
+        if any(pool.health.values()):
+            report.cache_stats["pool_health"] = dict(pool.health)
         # cache-metric core deltas (DESIGN §10).  Process-local: tasks that
         # ran in pool workers count in the worker, not here, so parallel
         # sweeps under-report — serial sweeps (and the cachesim benches)

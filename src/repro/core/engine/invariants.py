@@ -23,6 +23,14 @@ to ``ENGINE_CACHE_VERSION``: a cache written by an engine with different
 task semantics, and any corrupted or truncated payload, is rejected
 wholesale — loads never raise on bad files, they just come back cold.
 Writes are atomic (temp file + ``os.replace``).
+
+Self-healing (DESIGN.md §13): a blob that fails the magic or digest check
+is *quarantined* — renamed to ``<path>.corrupt`` so the next save rebuilds
+a clean file and the damaged one stays on disk for diagnosis — and counted
+in ``health["corrupt_quarantined"]``.  A version-mismatched blob is left in
+place (an older engine may still want it) but counted in
+``health["version_skew"]``.  Either way the load comes back cold, never
+wrong.
 """
 from __future__ import annotations
 
@@ -34,6 +42,8 @@ import pickle
 import tempfile
 import threading
 from typing import Hashable
+
+from repro import faults
 
 # Bump whenever a structural task's semantics, arguments, or key schema
 # change: the digest of every persisted entry covers this value, so caches
@@ -97,6 +107,8 @@ class InvariantCache:
         self._sizes: dict = {}      # key -> record bytes (max_bytes only)
         self.path = os.fspath(path) if path is not None else None
         self._dirty = False
+        self.health = {"corrupt_quarantined": 0, "version_skew": 0,
+                       "load_errors": 0}
         self.loaded_entries = 0
         if self.path:
             self.loaded_entries = self.load()
@@ -156,27 +168,33 @@ class InvariantCache:
                     self._evict_over_budget()
 
     def _evict_over_budget(self) -> None:
-        if not self._bounded or self._held:
-            return
+        # under the hold lock: a concurrent hold() must not observe (and a
+        # concurrent store() must not interleave with) a half-done eviction
+        with self._hold_lock:
+            if not self._bounded or self._held:
+                return
 
-        def over() -> bool:
-            if self.max_entries is not None and len(self) > self.max_entries:
-                return True
-            return self.max_bytes is not None and self._bytes > self.max_bytes
+            def over() -> bool:
+                if (self.max_entries is not None
+                        and len(self) > self.max_entries):
+                    return True
+                return (self.max_bytes is not None
+                        and self._bytes > self.max_bytes)
 
-        while over():
-            # disk-loaded entries never probed this process are the coldest;
-            # then the least recently used live entry (insertion-ordered)
-            source = self._loaded if self._loaded else self._store
-            if not source:
-                break
-            key = next(iter(source))
-            del source[key]
-            size = self._sizes.pop(key, 0)
-            self._bytes -= size
-            self.evictions += 1
-            self.evicted_bytes += size
-            self._dirty = True
+            while over():
+                # disk-loaded entries never probed this process are the
+                # coldest; then the least recently used live entry
+                # (insertion-ordered)
+                source = self._loaded if self._loaded else self._store
+                if not source:
+                    break
+                key = next(iter(source))
+                del source[key]
+                size = self._sizes.pop(key, 0)
+                self._bytes -= size
+                self.evictions += 1
+                self.evicted_bytes += size
+                self._dirty = True
 
     def lookup(self, key: Hashable):
         """Return the cached outcome pair or None, counting a hit (a task
@@ -198,9 +216,16 @@ class InvariantCache:
         self.hits += 1
 
     def store(self, key: Hashable, outcome: tuple) -> None:
-        self._store[key] = outcome
-        self._dirty = True
-        if self._bounded:
+        if not self._bounded:
+            self._store[key] = outcome
+            self._dirty = True
+            return
+        # bounded caches serialize stores against hold()/eviction: a store
+        # racing an eviction pass must never land between the budget check
+        # and the deletions (it could be evicted before its sweep reads it)
+        with self._hold_lock:
+            self._store[key] = outcome
+            self._dirty = True
             if self.max_bytes is not None:
                 size = self._record_bytes(key, outcome)
                 self._bytes += size - self._sizes.get(key, 0)
@@ -210,7 +235,8 @@ class InvariantCache:
     def stats(self) -> dict:
         return {"hits": self.hits, "misses": self.misses,
                 "entries": len(self), "evictions": self.evictions,
-                "evicted_bytes": self.evicted_bytes}
+                "evicted_bytes": self.evicted_bytes,
+                "health": dict(self.health)}
 
     def clear(self) -> None:
         self._store.clear()
@@ -227,24 +253,40 @@ class InvariantCache:
         Corruption-tolerant by construction: an unreadable file, a foreign
         or version-mismatched header, and a payload whose content digest
         does not verify all degrade to "no cached entries", never to an
-        exception — a cold run is always correct, just slower.
+        exception — a cold run is always correct, just slower.  Corrupt
+        blobs are additionally quarantined to ``<path>.corrupt`` so the
+        next ``save`` rebuilds a clean file (health counters record both).
         """
         path = path or self.path
         if not path or not os.path.exists(path):
             return 0
         try:
             with open(path, "rb") as f:
-                header = pickle.load(f)
-                if not (isinstance(header, dict)
-                        and header.get("magic") == _MAGIC
-                        and header.get("version") == ENGINE_CACHE_VERSION):
-                    return 0
-                digest = pickle.load(f)
-                payload = f.read()
+                raw = f.read()
+        except OSError:
+            self.health["load_errors"] += 1
+            return 0
+        # fault-injection site: bit rot between write and read-back
+        raw = faults.corrupt_bytes("invcache.load", raw)
+        try:
+            buf = io.BytesIO(raw)
+            header = pickle.load(buf)
+            if not (isinstance(header, dict)
+                    and header.get("magic") == _MAGIC):
+                self._quarantine(path)
+                return 0
+            if header.get("version") != ENGINE_CACHE_VERSION:
+                # legitimately foreign, not damaged: leave the file alone
+                self.health["version_skew"] += 1
+                return 0
+            digest = pickle.load(buf)
+            payload = buf.read()
             if _digest(payload) != digest:
+                self._quarantine(path)
                 return 0
             records = pickle.loads(payload)
         except Exception:
+            self._quarantine(path)
             return 0
         loaded = 0
         for record in records if isinstance(records, list) else []:
@@ -260,6 +302,15 @@ class InvariantCache:
             except Exception:
                 continue
         return loaded
+
+    def _quarantine(self, path: str) -> None:
+        """Move a damaged blob aside so the next save starts clean while
+        the evidence survives for diagnosis."""
+        self.health["corrupt_quarantined"] += 1
+        try:
+            os.replace(path, path + ".corrupt")
+        except OSError:
+            pass
 
     def save(self, path: str | None = None) -> int:
         """Atomically persist the store; return how many entries were written.

@@ -14,18 +14,47 @@ a suite sweep produces thousands of sub-millisecond structural tasks, and
 one future per task makes pickling/IPC the dominant cost.  Chunking keeps
 every worker busy while amortizing the round-trip; flattening the chunked
 results preserves submission order exactly.
+
+Failure model (DESIGN.md §13): a chunk whose worker crashes
+(``BrokenProcessPool``) or blows the per-chunk deadline does not fail the
+sweep.  The pool terminates and rebuilds the executor, then retries the
+failed chunks with bounded exponential backoff.  Because tasks are pure,
+a retried chunk recomputes exactly what the lost one would have — recovery
+is bitwise invisible.  Chunks that keep failing are split to single-task
+retries; a task that still fails alone is *quarantined*: its outcome
+becomes ``("err", PoisonTaskError(...))``, which the engine records as a
+skipped config (or raises under strict mode) — never a wrong number, never
+a hang.  ``TaskPool.health`` counts rebuilds/retries/hangs/quarantines for
+observability.
 """
 from __future__ import annotations
 
+import concurrent.futures
 import multiprocessing
 import os
 import sys
+import time
 from concurrent.futures import ProcessPoolExecutor
 from typing import Sequence
+
+from repro import faults
 
 # Chunks submitted per worker per run: enough slack for load balancing
 # between uneven task costs, few enough that IPC stays amortized.
 _CHUNKS_PER_WORKER = 4
+
+# Backoff between retry rounds: base * 2^round, capped (a sweep should
+# recover from a crashed worker in well under a second).
+_BACKOFF_CAP_S = 1.0
+
+
+class PoisonTaskError(RuntimeError):
+    """A task quarantined after repeatedly killing or wedging workers.
+
+    Subclasses ``RuntimeError`` so the engine's outcome reader records it
+    as a skipped config instead of aborting the sweep (strict mode still
+    raises it).
+    """
 
 
 def guarded_call(fn, args) -> tuple:
@@ -40,6 +69,21 @@ def guarded_call(fn, args) -> tuple:
 def guarded_batch(calls: Sequence[tuple]) -> list:
     """Worker-side loop over one chunk of ``(fn, args)`` calls."""
     return [guarded_call(fn, args) for fn, args in calls]
+
+
+def _pool_batch(calls: Sequence[tuple]) -> list:
+    """Worker-process chunk entry point.
+
+    The crash/hang fault-injection sites live only here — never on the
+    serial path — so an injected worker fault can kill a *pool worker* but
+    never the parent.  ``ensure_env_plan`` makes forked workers (which
+    inherit parent module state from before the plan was installed) and
+    spawned/forkserver workers (fresh interpreters) adopt the env plan.
+    """
+    faults.ensure_env_plan()
+    faults.crash_point("pool.worker_crash")
+    faults.hang_point("pool.worker_hang")
+    return guarded_batch(calls)
 
 
 def default_workers() -> int:
@@ -103,8 +147,19 @@ def _chunk(calls: list, n_chunks: int) -> list:
     return [calls[i:i + size] for i in range(0, len(calls), size)]
 
 
+def _default_deadline() -> float | None:
+    env = os.environ.get("REPRO_POOL_DEADLINE_S")
+    if not env:
+        return None
+    try:
+        v = float(env)
+    except ValueError:
+        return None
+    return v if v > 0 else None
+
+
 class TaskPool:
-    """A reusable worker pool for the rounds of one exploration sweep.
+    """A reusable, self-healing worker pool for one exploration sweep.
 
     The tiered search evaluates tasks in several rounds (bound, refine
     tiers, final combine inputs); spinning a fresh ``ProcessPoolExecutor``
@@ -112,12 +167,33 @@ class TaskPool:
     executor lazily on the first non-trivial round and reuses it; a warm
     (fully cached) sweep never forks at all.
 
+    ``chunk_deadline_s`` bounds how long one chunk may run before its
+    worker is presumed hung (default from ``REPRO_POOL_DEADLINE_S``; None
+    disables the deadline).  ``max_retries`` bounds consecutive
+    *no-progress* rounds — a round that resolves at least one chunk resets
+    the budget, so a long recovery is never mistaken for a poison task.
+
     Use as a context manager; ``run`` mirrors ``run_tasks`` semantics.
     """
 
-    def __init__(self, parallel: bool = False, max_workers: int | None = None):
+    def __init__(
+        self,
+        parallel: bool = False,
+        max_workers: int | None = None,
+        *,
+        chunk_deadline_s: float | None = None,
+        max_retries: int = 3,
+        backoff_base_s: float = 0.05,
+    ):
         self.parallel = parallel
         self.workers = max_workers or default_workers()
+        self.chunk_deadline_s = (
+            chunk_deadline_s if chunk_deadline_s is not None
+            else _default_deadline())
+        self.max_retries = max_retries
+        self.backoff_base_s = backoff_base_s
+        self.health = {"rebuilds": 0, "retries": 0, "hung_chunks": 0,
+                       "broken_pools": 0, "quarantined": 0}
         self._executor = None
         self._broken = False
 
@@ -146,23 +222,107 @@ class TaskPool:
                 self._broken = True
         return self._executor
 
+    def _kill_executor(self) -> None:
+        """Tear down an executor presumed broken or hung.  ``shutdown``
+        alone would join hung workers forever, so terminate them first."""
+        ex, self._executor = self._executor, None
+        if ex is None:
+            return
+        for proc in list(getattr(ex, "_processes", {}).values()):
+            try:
+                proc.terminate()
+            except Exception:  # noqa: BLE001 — already-dead workers
+                pass
+        try:
+            ex.shutdown(wait=False, cancel_futures=True)
+        except Exception:  # noqa: BLE001
+            pass
+
+    def _backoff(self, stall: int) -> None:
+        delay = min(self.backoff_base_s * (2 ** max(stall - 1, 0)),
+                    _BACKOFF_CAP_S)
+        if delay > 0:
+            time.sleep(delay)
+
     def run(self, calls: Sequence[tuple]) -> list:
         """Evaluate ``[(fn, args), ...]``, outcomes in input order."""
         calls = list(calls)
         if not (self.parallel and self.workers > 1 and len(calls) > 1):
             return guarded_batch(calls)
-        ex = self._ensure_executor()
-        if ex is None:
+        if self._ensure_executor() is None:
             return guarded_batch(calls)
-        chunks = _chunk(calls, self.workers * _CHUNKS_PER_WORKER)
-        try:
-            futures = [ex.submit(guarded_batch, chunk) for chunk in chunks]
-            return [out for f in futures for out in f.result()]
-        except (OSError, ValueError, RuntimeError):
-            # pool died mid-flight (e.g. sandboxed fork) — never again
-            self._broken = True
-            self.close()
-            return guarded_batch(calls)
+        return self._run_parallel(calls)
+
+    def _run_parallel(self, calls: list) -> list:
+        outcomes: list = [None] * len(calls)
+        groups = _chunk(list(range(len(calls))),
+                        self.workers * _CHUNKS_PER_WORKER)
+        stall = 0       # consecutive rounds that resolved nothing
+        split = False   # already escalated to single-task groups?
+        while groups:
+            ex = self._ensure_executor()
+            if ex is None:
+                # pool permanently unavailable: finish in-process (the
+                # legacy fallback; injected faults never fire here)
+                for g in groups:
+                    for i, out in zip(g, guarded_batch(
+                            [calls[i] for i in g])):
+                        outcomes[i] = out
+                return outcomes
+            futures = [(g, ex.submit(_pool_batch, [calls[i] for i in g]))
+                       for g in groups]
+            failed, broken, progress = [], False, False
+            for g, f in futures:
+                try:
+                    if broken:
+                        # executor already condemned: only harvest results
+                        # that finished before the failure, don't wait
+                        if not f.done():
+                            failed.append(g)
+                            continue
+                        res = f.result(timeout=0)
+                    else:
+                        res = f.result(timeout=self.chunk_deadline_s)
+                except concurrent.futures.TimeoutError:
+                    broken = True
+                    self.health["hung_chunks"] += 1
+                    failed.append(g)
+                    continue
+                except (OSError, RuntimeError):
+                    # BrokenProcessPool and friends — a worker died
+                    broken = True
+                    self.health["broken_pools"] += 1
+                    failed.append(g)
+                    continue
+                for i, out in zip(g, res):
+                    outcomes[i] = out
+                progress = True
+            if not failed:
+                return outcomes
+            if broken:
+                self._kill_executor()
+                self.health["rebuilds"] += 1
+            stall = 0 if progress else stall + 1
+            if stall > self.max_retries:
+                if not split:
+                    # one fresh budget with every failed task isolated in
+                    # its own chunk — separates the poison task from its
+                    # innocent chunk-mates
+                    split, stall = True, 0
+                    groups = [[i] for g in failed for i in g]
+                else:
+                    for g in failed:
+                        for i in g:
+                            outcomes[i] = ("err", PoisonTaskError(
+                                "task quarantined: worker crashed or hung "
+                                f"{self.max_retries + 1} times in a row"))
+                        self.health["quarantined"] += len(g)
+                    return outcomes
+            else:
+                groups = failed
+            self.health["retries"] += 1
+            self._backoff(stall)
+        return outcomes
 
 
 def run_tasks(

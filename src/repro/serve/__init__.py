@@ -9,8 +9,9 @@ protocol, and the cache versioning/eviction contract.
 """
 from .client import PriceClient, ServeError
 from .daemon import PricingDaemon, serve
-from .scheduler import Scheduler
+from .scheduler import DeadlineExceeded, QueueFullError, Scheduler
 from .schema import SCHEMA_VERSION, request_digest
 
 __all__ = ["PriceClient", "ServeError", "PricingDaemon", "serve",
-           "Scheduler", "SCHEMA_VERSION", "request_digest"]
+           "Scheduler", "QueueFullError", "DeadlineExceeded",
+           "SCHEMA_VERSION", "request_digest"]

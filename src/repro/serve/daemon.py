@@ -7,17 +7,27 @@ machine.  Protocol: newline-delimited JSON over a local stream socket, one
 message per line, every line carrying ``schema_version``.
 
 Client -> server ops:
-    {"op": "price", "id": <any>, "request": <encoded PriceRequest>}
+    {"op": "price", "id": <any>, "request": <encoded PriceRequest>,
+     "deadline_s": <optional seconds>}
     {"op": "stats"} | {"op": "ping"} | {"op": "shutdown"}
 
 Server -> client lines:
     {"ok": true, "op": "result", "id": ..., "digest": ..., "result": ...}
     {"ok": true, "op": "stats"/"pong"/"bye", ...}
-    {"ok": false, "id": ..., "error": "..."}
+    {"ok": false, "id": ..., "error": "...", "error_class": "...",
+     "retry_after_s": <only on backpressure rejections>}
 
 A connection may pipeline many ``price`` ops; results stream back **as
 they complete** (matched by ``id``, not by order) — a memo-hit answer for
 request 50 does not wait behind a cold sweep for request 1.
+
+Failure model (DESIGN.md §13): every error line names the server-side
+exception class so clients can distinguish retryable conditions
+(``QueueFullError`` backpressure) from permanent ones; a client that
+disconnects mid-request has its outstanding submissions cancelled, so an
+abandoned cold sweep still queued never runs; and shutdown is honest — a
+serve or scheduler thread that fails to drain raises/exits nonzero instead
+of silently leaking.
 """
 from __future__ import annotations
 
@@ -26,11 +36,13 @@ import json
 import os
 import socket
 import socketserver
+import sys
 import threading
 
+from repro import faults
 from repro.core.engine import Explorer
 
-from .scheduler import Scheduler
+from .scheduler import QueueFullError, Scheduler
 from .schema import SCHEMA_VERSION, decode, encode, request_digest
 
 
@@ -43,42 +55,62 @@ class _Handler(socketserver.StreamRequestHandler):
     def handle(self):
         server: PricingDaemon = self.server  # type: ignore[assignment]
         write_lock = threading.Lock()
+        submitted: list = []    # futures owned by this connection
 
         def send(payload: dict):
+            if faults.drop_point("serve.socket_drop"):
+                # injected connection loss: sever this client mid-response
+                # (its retry path must recover; see bench_chaos_soak)
+                try:
+                    self.connection.shutdown(socket.SHUT_RDWR)
+                except OSError:
+                    pass
+                return
             data = _line(payload)
             with write_lock:
                 try:
                     self.wfile.write(data)
                     self.wfile.flush()
-                except (BrokenPipeError, OSError):
+                except (BrokenPipeError, OSError, ValueError):
+                    # client gone (ValueError: wfile already closed after
+                    # the handler returned) — nobody is listening
                     pass
 
-        for raw in self.rfile:
-            raw = raw.strip()
-            if not raw:
-                continue
-            try:
-                msg = json.loads(raw)
-                op = msg.get("op")
-            except Exception as exc:
-                send({"ok": False, "error": f"bad message: {exc}"})
-                continue
-            if op == "ping":
-                send({"ok": True, "op": "pong"})
-            elif op == "stats":
-                send({"ok": True, "op": "stats",
-                      "stats": server.scheduler.stats()})
-            elif op == "shutdown":
-                send({"ok": True, "op": "bye"})
-                server.request_shutdown()
-                return
-            elif op == "price":
-                self._price(server, msg, send)
-            else:
-                send({"ok": False, "id": msg.get("id"),
-                      "error": f"unknown op {op!r}"})
+        try:
+            for raw in self.rfile:
+                raw = raw.strip()
+                if not raw:
+                    continue
+                try:
+                    msg = json.loads(raw)
+                    op = msg.get("op")
+                except Exception as exc:
+                    send({"ok": False, "error": f"bad message: {exc}",
+                          "error_class": type(exc).__name__})
+                    continue
+                if op == "ping":
+                    send({"ok": True, "op": "pong"})
+                elif op == "stats":
+                    send({"ok": True, "op": "stats",
+                          "stats": server.scheduler.stats()})
+                elif op == "shutdown":
+                    send({"ok": True, "op": "bye"})
+                    server.request_shutdown()
+                    return
+                elif op == "price":
+                    self._price(server, msg, send, submitted)
+                else:
+                    send({"ok": False, "id": msg.get("id"),
+                          "error": f"unknown op {op!r}",
+                          "error_class": "ValueError"})
+        finally:
+            # client gone: detach every future this connection still owns —
+            # a queued request nobody is waiting for must not burn a sweep
+            for fut in submitted:
+                if not fut.done():
+                    server.scheduler.cancel(fut)
 
-    def _price(self, server, msg, send):
+    def _price(self, server, msg, send, submitted):
         req_id = msg.get("id")
         try:
             version = msg.get("schema_version")
@@ -87,17 +119,24 @@ class _Handler(socketserver.StreamRequestHandler):
                                  f"{SCHEMA_VERSION}")
             request = decode(msg["request"])
             digest = request_digest(request)
+            deadline_s = msg.get("deadline_s")
+            if deadline_s is not None:
+                deadline_s = float(deadline_s)
         except Exception as exc:
             send({"ok": False, "id": req_id,
-                  "error": f"{type(exc).__name__}: {exc}"})
+                  "error": f"{type(exc).__name__}: {exc}",
+                  "error_class": type(exc).__name__})
             return
 
         def on_done(fut):
+            if fut.cancelled():
+                return              # client already hung up
             try:
                 result = fut.result()
             except Exception as exc:
                 send({"ok": False, "id": req_id, "digest": digest,
-                      "error": f"{type(exc).__name__}: {exc}"})
+                      "error": f"{type(exc).__name__}: {exc}",
+                      "error_class": type(exc).__name__})
                 return
             # memoized wire rendering: warm answers re-send cached text
             wire = server.scheduler.encoded(digest, result)
@@ -106,9 +145,19 @@ class _Handler(socketserver.StreamRequestHandler):
                   "digest": digest, "result": body})
 
         try:
-            server.scheduler.submit(request, digest).add_done_callback(on_done)
+            fut = server.scheduler.submit(request, digest,
+                                          deadline_s=deadline_s)
+        except QueueFullError as exc:    # backpressure: explicit + retryable
+            send({"ok": False, "id": req_id, "digest": digest,
+                  "error": str(exc), "error_class": "QueueFullError",
+                  "retry_after_s": exc.retry_after_s})
+            return
         except RuntimeError as exc:      # shutting down
-            send({"ok": False, "id": req_id, "error": str(exc)})
+            send({"ok": False, "id": req_id, "error": str(exc),
+                  "error_class": type(exc).__name__})
+            return
+        submitted.append(fut)
+        fut.add_done_callback(on_done)
 
 
 class PricingDaemon(socketserver.ThreadingUnixStreamServer):
@@ -118,12 +167,14 @@ class PricingDaemon(socketserver.ThreadingUnixStreamServer):
     allow_reuse_address = True
 
     def __init__(self, socket_path: str, *, engine: Explorer | None = None,
-                 scheduler: Scheduler | None = None, memo_entries: int = 1024):
+                 scheduler: Scheduler | None = None, memo_entries: int = 1024,
+                 join_timeout_s: float = 10.0):
         self.socket_path = os.fspath(socket_path)
         if os.path.exists(self.socket_path):
             os.unlink(self.socket_path)
         self.scheduler = scheduler or Scheduler(engine,
                                                 memo_entries=memo_entries)
+        self.join_timeout_s = join_timeout_s
         self._shutdown_requested = threading.Event()
         super().__init__(self.socket_path, _Handler)
 
@@ -133,14 +184,25 @@ class PricingDaemon(socketserver.ThreadingUnixStreamServer):
             self._shutdown_requested.set()
             threading.Thread(target=self.shutdown, daemon=True).start()
 
-    def close(self):
-        """Stop serving, drain the scheduler, persist the cache."""
+    def close(self) -> bool:
+        """Stop serving, drain the scheduler, persist the cache.
+
+        Returns False when the scheduler worker failed to drain within
+        ``join_timeout_s`` (logged to stderr) — ``serve``/``main`` turn
+        that into a nonzero exit.
+        """
         self.server_close()
-        self.scheduler.shutdown(wait=True)
+        drained = self.scheduler.shutdown(wait=True,
+                                          timeout=self.join_timeout_s)
+        if not drained:
+            print(f"repro.serve: scheduler worker still running after "
+                  f"{self.join_timeout_s}s drain timeout; cache saved, "
+                  f"worker abandoned", file=sys.stderr)
         try:
             os.unlink(self.socket_path)
         except OSError:
             pass
+        return drained
 
     # context manager: `with PricingDaemon(...) as d:` serves in background
     def __enter__(self):
@@ -151,20 +213,36 @@ class PricingDaemon(socketserver.ThreadingUnixStreamServer):
 
     def __exit__(self, *exc):
         self.shutdown()
-        self._thread.join(timeout=10)
-        self.close()
+        self._thread.join(timeout=self.join_timeout_s)
+        stuck = self._thread.is_alive()
+        drained = self.close()
+        if stuck:
+            # never swallow a wedged serve thread: the caller believes the
+            # daemon is gone while it still holds the socket/scheduler
+            raise RuntimeError(
+                f"serve thread still alive {self.join_timeout_s}s after "
+                f"shutdown; a handler is wedged")
+        if not drained and exc == (None, None, None):
+            raise RuntimeError(
+                f"scheduler worker failed to drain within "
+                f"{self.join_timeout_s}s at daemon exit")
         return False
 
 
-def serve(socket_path: str, **daemon_kw) -> None:
-    """Blocking entry point used by ``python -m repro.serve``."""
+def serve(socket_path: str, **daemon_kw) -> bool:
+    """Blocking entry point used by ``python -m repro.serve``.
+
+    Returns True on a clean drain, False when shutdown left a wedged
+    worker behind (``main`` exits nonzero so supervisors notice).
+    """
     daemon = PricingDaemon(socket_path, **daemon_kw)
     try:
         daemon.serve_forever()
     except KeyboardInterrupt:
         pass
     finally:
-        daemon.close()
+        clean = daemon.close()
+    return clean
 
 
 def main(argv=None) -> int:
@@ -182,16 +260,25 @@ def main(argv=None) -> int:
     ap.add_argument("--cache-max-bytes", type=int, default=None)
     ap.add_argument("--memo-entries", type=int, default=1024,
                     help="result-memo LRU size (default %(default)s)")
+    ap.add_argument("--max-queue", type=int, default=None,
+                    help="bound the request queue; beyond it submissions "
+                         "are rejected with retry-after backpressure")
+    ap.add_argument("--deadline-s", type=float, default=None,
+                    help="default per-request deadline; past it requests "
+                         "degrade to the closed-form bound ranking")
     args = ap.parse_args(argv)
     engine = Explorer(parallel=args.parallel, max_workers=args.max_workers,
                       cache_path=args.cache_path,
                       cache_max_entries=args.cache_max_entries,
                       cache_max_bytes=args.cache_max_bytes)
+    scheduler = Scheduler(engine, memo_entries=args.memo_entries,
+                          max_queue=args.max_queue,
+                          default_deadline_s=args.deadline_s)
     print(f"repro.serve: listening on {args.socket} "
           f"(cache: {args.cache_path or 'in-memory'}, "
           f"{engine.cache.loaded_entries} entries warm)")
-    serve(args.socket, engine=engine, memo_entries=args.memo_entries)
-    return 0
+    clean = serve(args.socket, scheduler=scheduler)
+    return 0 if clean else 1
 
 
 # client availability probe used by tests/benches

@@ -18,18 +18,38 @@ digest is **priced at most once** while it stays memoized:
     prefixes, then split back per request — sharing the invariant cache,
     cell dedupe, and pool batching across clients.
 
-Counters make all of this observable (and gateable):
-``requests = memo_hits + dedupe_joins + keys_priced`` always holds.
+Robustness (DESIGN.md §13):
+
+  * **bounded queue** — with ``max_queue`` set, a submission that would
+    grow the queue past the bound is rejected with ``QueueFullError``
+    (carrying a ``retry_after_s`` hint) instead of queueing unboundedly;
+    memo hits and in-flight joins are never rejected (they cost no sweep);
+  * **per-request deadlines** — a request carrying ``deadline_s`` that
+    cannot finish its exact sweep in time resolves to the tier-1
+    closed-form bound ranking (``repro.api.price_bounds``) flagged
+    ``degraded=True`` — an explicit, sound, cheap answer instead of a
+    timeout.  Degraded results are never memoized (a later undeadlined ask
+    gets the exact sweep) and deadline requests never coalesce;
+  * **cancellation** — ``cancel(fut)`` detaches a waiter whose client went
+    away; a queued request all of whose waiters cancelled is dropped
+    before any engine work runs.
+
+Counters make all of this observable (and gateable): ``requests =
+memo_hits + dedupe_joins + keys_priced + cancelled`` always holds
+(``cancelled`` counts requests dropped before pricing; degraded
+resolutions are ordinary ``keys_priced``), and rejected submissions are
+counted separately — they were never accepted as requests.
 """
 from __future__ import annotations
 
 import dataclasses
 import json
 import threading
+import time
 from collections import OrderedDict
 from concurrent.futures import Future
 
-from repro.api import PriceRequest, PriceResult, price
+from repro.api import PriceRequest, PriceResult, price, price_bounds
 from repro.core.engine import (
     EvalResult,
     ExplorationReport,
@@ -39,6 +59,24 @@ from repro.core.engine import (
 )
 
 from .schema import encode, request_digest
+
+
+class QueueFullError(RuntimeError):
+    """Backpressure: the scheduler queue is at its bound.
+
+    ``retry_after_s`` estimates when capacity should free up — clients
+    (``PriceClient`` does this automatically) should back off at least
+    that long and resubmit; the request digest makes the retry idempotent.
+    """
+
+    def __init__(self, message: str, retry_after_s: float = 0.1):
+        super().__init__(message)
+        self.retry_after_s = retry_after_s
+
+
+class DeadlineExceeded(RuntimeError):
+    """Internal: raised out of the engine's progress callback to abandon
+    an exact sweep whose request deadline has passed."""
 
 
 class _Memo:
@@ -52,14 +90,19 @@ class _Memo:
 
 
 class _Pending:
-    """One in-flight digest: the request and every future joined to it."""
+    """One in-flight digest: the request and every future joined to it.
 
-    __slots__ = ("digest", "request", "futures")
+    ``deadline`` is an absolute ``time.monotonic()`` instant (None for
+    no deadline) — absolute so queue wait counts against it.
+    """
 
-    def __init__(self, digest, request):
+    __slots__ = ("digest", "request", "futures", "deadline")
+
+    def __init__(self, digest, request, deadline=None):
         self.digest = digest
         self.request = request
         self.futures: list = []
+        self.deadline = deadline
 
 
 def _coalesce_key(request: PriceRequest):
@@ -113,10 +156,14 @@ class Scheduler:
     """Thread-safe pricing scheduler over one shared ``Explorer``."""
 
     def __init__(self, engine: Explorer | None = None, *,
-                 memo_entries: int = 1024, coalesce: bool = True):
+                 memo_entries: int = 1024, coalesce: bool = True,
+                 max_queue: int | None = None,
+                 default_deadline_s: float | None = None):
         self.engine = engine or Explorer()
         self.memo_entries = memo_entries
         self.coalesce = coalesce
+        self.max_queue = max_queue
+        self.default_deadline_s = default_deadline_s
         self._memo: OrderedDict = OrderedDict()   # digest -> _Memo (LRU)
         self._inflight: dict = {}                 # digest -> _Pending
         self._queue: list = []                    # _Pending FIFO
@@ -127,33 +174,55 @@ class Scheduler:
             "requests": 0, "memo_hits": 0, "dedupe_joins": 0,
             "keys_priced": 0, "errors": 0,
             "coalesced_sweeps": 0, "coalesced_requests": 0,
+            "rejected": 0, "degraded": 0, "cancelled": 0,
         }
         self._worker = threading.Thread(target=self._run, name="repro-serve",
                                         daemon=True)
         self._worker.start()
 
     # ---- client side ---------------------------------------------------
-    def submit(self, request: PriceRequest,
-               digest: str | None = None) -> Future:
-        """Queue one request; the future resolves to its ``PriceResult``."""
+    def submit(self, request: PriceRequest, digest: str | None = None, *,
+               deadline_s: float | None = None) -> Future:
+        """Queue one request; the future resolves to its ``PriceResult``.
+
+        ``deadline_s`` (falling back to ``default_deadline_s``) bounds the
+        wall time this request may spend queued + priced; past it, the
+        future resolves to a ``degraded=True`` bound ranking.  Raises
+        ``QueueFullError`` when the queue is at ``max_queue`` (memo hits
+        and joins are exempt — they need no queue slot).
+        """
         digest = digest or request_digest(request)
+        if deadline_s is None:
+            deadline_s = self.default_deadline_s
         fut: Future = Future()
         with self._wake:
             if self._stop:
                 raise RuntimeError("scheduler is shut down")
-            self.counters["requests"] += 1
             memo = self._memo.get(digest)
             if memo is not None:
+                self.counters["requests"] += 1
                 self.counters["memo_hits"] += 1
                 self._memo.move_to_end(digest)
                 fut.set_result(memo.result)
                 return fut
             pending = self._inflight.get(digest)
             if pending is not None:
+                self.counters["requests"] += 1
                 self.counters["dedupe_joins"] += 1
                 pending.futures.append(fut)
                 return fut
-            pending = _Pending(digest, request)
+            if self.max_queue is not None and len(self._queue) >= self.max_queue:
+                # rejected before being counted as a request: the counter
+                # identity covers accepted work only
+                self.counters["rejected"] += 1
+                raise QueueFullError(
+                    f"scheduler queue is full ({self.max_queue} pending); "
+                    f"retry with backoff",
+                    retry_after_s=0.05 * (len(self._queue) + 1))
+            self.counters["requests"] += 1
+            deadline = (time.monotonic() + deadline_s
+                        if deadline_s is not None else None)
+            pending = _Pending(digest, request, deadline)
             pending.futures.append(fut)
             self._inflight[digest] = pending
             self._queue.append(pending)
@@ -164,6 +233,26 @@ class Scheduler:
                   digest: str | None = None) -> PriceResult:
         """Synchronous convenience: submit and wait."""
         return self.submit(request, digest).result()
+
+    def cancel(self, fut: Future) -> bool:
+        """Detach one waiter (its client went away).
+
+        A queued request all of whose waiters cancelled is dropped without
+        pricing (counted in ``cancelled``); a request already being priced
+        completes and memoizes — the work is sunk either way, and the next
+        identical ask becomes a memo hit.  Returns True if ``fut`` itself
+        was cancelled.
+        """
+        with self._wake:
+            for pending in list(self._inflight.values()):
+                if fut in pending.futures:
+                    pending.futures.remove(fut)
+                    if not pending.futures and pending in self._queue:
+                        self._queue.remove(pending)
+                        self._inflight.pop(pending.digest, None)
+                        self.counters["cancelled"] += 1
+                    break
+        return fut.cancel()
 
     def encoded(self, digest: str, result: PriceResult) -> str:
         """Wire text for one result, rendered once per memoized digest —
@@ -189,15 +278,22 @@ class Scheduler:
         out["engine_cache"] = self.engine.cache.stats()
         return out
 
-    def shutdown(self, wait: bool = True, timeout: float | None = None):
+    def shutdown(self, wait: bool = True,
+                 timeout: float | None = None) -> bool:
         """Stop accepting work; drain what is queued, then exit the worker
-        and persist the engine's invariant cache."""
+        and persist the engine's invariant cache.  Returns False when the
+        worker failed to drain within ``timeout`` (it is a daemon thread,
+        so a stuck engine cannot wedge interpreter exit — but callers
+        should surface the failure; ``PricingDaemon`` does)."""
         with self._wake:
             self._stop = True
             self._wake.notify_all()
+        drained = True
         if wait:
             self._worker.join(timeout)
+            drained = not self._worker.is_alive()
         self.engine.save_cache()
+        return drained
 
     # ---- worker side ---------------------------------------------------
     def _run(self):
@@ -215,7 +311,11 @@ class Scheduler:
         solo: list = []
         if self.coalesce and len(batch) > 1:
             for p in batch:
-                key = _coalesce_key(p.request)
+                # deadline requests stay solo: a merged sweep would couple
+                # their degradation decision to unrelated requests.  Fully
+                # cancelled pendings also stay solo (served as a no-op).
+                key = (None if p.deadline is not None or not p.futures
+                       else _coalesce_key(p.request))
                 if key is None:
                     solo.append(p)
                 else:
@@ -230,12 +330,45 @@ class Scheduler:
             self._serve_one(p)
 
     def _serve_one(self, pending):
+        if not pending.futures:
+            # every waiter cancelled after this pending left the queue in a
+            # worker batch — drop it without engine work
+            with self._lock:
+                self._inflight.pop(pending.digest, None)
+                self.counters["cancelled"] += 1
+            return
+        deadline = pending.deadline
+        if deadline is not None and time.monotonic() >= deadline:
+            self._serve_degraded(pending)
+            return
+        progress = None
+        if deadline is not None:
+            def progress(done, total):
+                if time.monotonic() >= deadline:
+                    raise DeadlineExceeded(
+                        f"deadline passed at {done}/{total} configs")
         try:
-            result = price(pending.request, engine=self.engine)
+            result = price(pending.request, engine=self.engine,
+                           progress=progress)
+        except DeadlineExceeded:
+            self._serve_degraded(pending)
         except BaseException as exc:
             self._resolve(pending, None, exc)
         else:
             self._resolve(pending, result, None)
+
+    def _serve_degraded(self, pending):
+        """Deadline blown: answer with the closed-form bound ranking,
+        explicitly flagged, instead of timing out or going silent."""
+        try:
+            result = price_bounds(pending.request, engine=self.engine)
+        except BaseException as exc:
+            self._resolve(pending, None, exc)
+            return
+        with self._lock:
+            self.counters["degraded"] += 1
+        # not memoized: the next undeadlined ask deserves the exact sweep
+        self._resolve(pending, result, None, memoize=False)
 
     def _serve_coalesced(self, group):
         tmpl = group[0].request
@@ -263,22 +396,28 @@ class Scheduler:
             report = _split_report(merged.report, f"q{i}::")
             self._resolve(p, PriceResult(report=report), None)
 
-    def _resolve(self, pending, result, exc):
+    def _resolve(self, pending, result, exc, memoize: bool = True):
         with self._lock:
             self._inflight.pop(pending.digest, None)
+            self.counters["keys_priced"] += 1
             if exc is None:
-                self.counters["keys_priced"] += 1
-                self._memo[pending.digest] = _Memo(result)
-                while len(self._memo) > self.memo_entries:
-                    self._memo.popitem(last=False)
+                if memoize:
+                    self._memo[pending.digest] = _Memo(result)
+                    while len(self._memo) > self.memo_entries:
+                        self._memo.popitem(last=False)
             else:
-                self.counters["keys_priced"] += 1
                 self.counters["errors"] += 1
-        for fut in pending.futures:
-            if exc is None:
-                fut.set_result(result)
-            else:
-                fut.set_exception(exc)
+            futures = list(pending.futures)
+        for fut in futures:
+            if fut.cancelled():
+                continue
+            try:
+                if exc is None:
+                    fut.set_result(result)
+                else:
+                    fut.set_exception(exc)
+            except Exception:  # noqa: BLE001 — racing client cancellation
+                pass
 
 
-__all__ = ["Scheduler"]
+__all__ = ["Scheduler", "QueueFullError", "DeadlineExceeded"]

@@ -1,0 +1,137 @@
+"""The deterministic fault-injection layer (DESIGN.md §13).
+
+The failure model is only as good as its injector: these tests pin that
+fault plans fire exactly where their seed/indices say, that cross-process
+token fires are globally once-only, and that with no plan installed every
+site is inert.
+"""
+import os
+
+import pytest
+
+from repro import faults
+from repro.faults import FaultInjector, FaultPlan, FaultSpec
+
+
+@pytest.fixture(autouse=True)
+def _no_ambient_plan(monkeypatch):
+    """Isolate from any CI-level REPRO_FAULT_PLAN, restoring the ambient
+    injector afterwards (the chaos CI job runs the whole test subset under
+    an ambient worker-fault plan)."""
+    prev = faults._INJECTOR
+    monkeypatch.delenv(faults.ENV_VAR, raising=False)
+    faults.clear()
+    yield
+    faults._INJECTOR = prev
+
+
+def test_at_indices_fire_exactly():
+    plan = FaultPlan(seed=1, faults={
+        "pool.worker_crash": FaultSpec(at=(1, 3))})
+    inj = FaultInjector(plan)
+    fired = [inj.fires("pool.worker_crash") is not None for _ in range(6)]
+    assert fired == [False, True, False, True, False, False]
+
+
+def test_max_fires_caps_a_rate_site():
+    plan = FaultPlan(seed=2, faults={
+        "serve.socket_drop": FaultSpec(rate=1.0, max_fires=2)})
+    inj = FaultInjector(plan)
+    fired = sum(inj.fires("serve.socket_drop") is not None
+                for _ in range(10))
+    assert fired == 2
+
+
+def test_rate_decisions_are_seed_deterministic():
+    def pattern(seed):
+        inj = FaultInjector(FaultPlan(seed=seed, faults={
+            "invcache.load": FaultSpec(rate=0.5)}))
+        return [inj.fires("invcache.load") is not None for _ in range(64)]
+
+    assert pattern(7) == pattern(7)       # same seed -> same decisions
+    assert pattern(7) != pattern(8)       # different seed -> different
+    assert 0 < sum(pattern(7)) < 64       # rate actually splits
+
+
+def test_token_fires_once_across_injectors(tmp_path):
+    """Two injectors over one token_dir model two pool workers: the fire
+    claims one global token, so exactly one of them actually faults."""
+    plan = FaultPlan(seed=3, token_dir=str(tmp_path), faults={
+        "pool.worker_crash": FaultSpec(at=(0,), max_fires=1, token=True)})
+    a, b = FaultInjector(plan), FaultInjector(plan)
+    hits = [a.fires("pool.worker_crash"), b.fires("pool.worker_crash")]
+    assert sum(h is not None for h in hits) == 1
+    tokens = [f for f in os.listdir(tmp_path) if f.endswith(".token")]
+    assert len(tokens) == 1
+
+
+def test_unknown_site_rejected_loudly():
+    with pytest.raises(ValueError, match="unknown fault site"):
+        FaultPlan(faults={"pool.worker_crsh": FaultSpec(at=(0,))})
+    with pytest.raises(ValueError, match="token_dir"):
+        FaultPlan(faults={"pool.worker_crash": FaultSpec(token=True)})
+
+
+def test_env_plan_json_roundtrip(monkeypatch, tmp_path):
+    plan = FaultPlan(seed=11, token_dir=str(tmp_path), faults={
+        "pool.worker_hang": FaultSpec(at=(0,), max_fires=1, arg=2.5,
+                                      token=True),
+        "invcache.load": FaultSpec(rate=0.25)})
+    monkeypatch.setenv(faults.ENV_VAR, plan.to_json())
+    parsed = faults.plan_from_env()
+    assert parsed == plan
+    faults.ensure_env_plan()
+    assert faults.active() == plan
+    # already installed: a second ensure does not replace the injector
+    inj = faults._INJECTOR
+    faults.ensure_env_plan()
+    assert faults._INJECTOR is inj
+
+
+def test_malformed_env_plan_raises(monkeypatch):
+    monkeypatch.setenv(faults.ENV_VAR, "{not json")
+    with pytest.raises(ValueError, match="not valid JSON"):
+        faults.plan_from_env()
+    monkeypatch.setenv(faults.ENV_VAR, '["a-list"]')
+    with pytest.raises(ValueError, match="JSON object"):
+        faults.plan_from_env()
+
+
+def test_disabled_sites_are_inert():
+    assert faults.fire("pool.worker_crash") is None
+    assert faults.drop_point("serve.socket_drop") is False
+    data = b"payload-bytes"
+    assert faults.corrupt_bytes("invcache.load", data) == data
+    faults.crash_point("pool.worker_crash")   # must be a no-op, not exit
+    faults.hang_point("pool.worker_hang")     # must be a no-op, not sleep
+
+
+def test_corrupt_bytes_flips_exactly_one_byte():
+    with faults.injected(FaultPlan(seed=5, faults={
+            "invcache.load": FaultSpec(at=(0,))})):
+        data = bytes(range(64))
+        out = faults.corrupt_bytes("invcache.load", data)
+        assert len(out) == len(data)
+        diffs = [i for i, (x, y) in enumerate(zip(data, out)) if x != y]
+        assert len(diffs) == 1
+        # second call: index 1 not in `at`, so data passes through intact
+        assert faults.corrupt_bytes("invcache.load", data) == data
+
+
+def test_injected_scope_restores_previous_plan():
+    outer = FaultPlan(seed=1, faults={
+        "serve.socket_drop": FaultSpec(at=(0,))})
+    faults.install(outer)
+    inner = FaultPlan(seed=2, faults={
+        "invcache.load": FaultSpec(at=(0,))})
+    with faults.injected(inner):
+        assert faults.active() == inner
+    assert faults.active() == outer
+
+
+def test_injector_stats_track_calls_and_fires():
+    inj = FaultInjector(FaultPlan(seed=1, faults={
+        "serve.socket_drop": FaultSpec(at=(0,), max_fires=1)}))
+    for _ in range(3):
+        inj.fires("serve.socket_drop")
+    assert inj.stats()["serve.socket_drop"] == {"calls": 3, "fired": 1}

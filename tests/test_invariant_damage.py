@@ -1,0 +1,212 @@
+"""Self-healing invariant cache: damaged blobs, version skew, hold races.
+
+Damage taxonomy (DESIGN.md §13): a truncated file, a flipped payload byte,
+and a foreign file must all load as *cold* (never wrong, never raising) and
+be quarantined to ``<path>.corrupt``; a version-mismatched blob is foreign
+but legitimate — counted, left in place, loaded cold.  After quarantine the
+next ``save`` rebuilds a clean file whose reload is bitwise-complete.
+"""
+import pickle
+import threading
+
+from repro import faults
+from repro.core.engine.invariants import (
+    ENGINE_CACHE_VERSION,
+    _MAGIC,
+    InvariantCache,
+)
+
+
+def _populate(path, n=20):
+    cache = InvariantCache(path)
+    entries = {("task", i): ("ok", {"value": i * i}) for i in range(n)}
+    for key, outcome in entries.items():
+        cache.store(key, outcome)
+    assert cache.save() == n
+    return entries
+
+
+def _reload(path):
+    return InvariantCache(path)
+
+
+def test_truncated_blob_quarantined_and_rebuilt(tmp_path):
+    path = str(tmp_path / "cache.inv")
+    entries = _populate(path)
+    blob = open(path, "rb").read()
+    with open(path, "wb") as f:
+        f.write(blob[:len(blob) // 2])      # torn write / partial copy
+
+    cache = _reload(path)
+    assert cache.loaded_entries == 0        # cold, not wrong
+    assert cache.health["corrupt_quarantined"] == 1
+    assert (tmp_path / "cache.inv.corrupt").exists()
+    assert not (tmp_path / "cache.inv").exists()
+
+    # the next populated save rebuilds a clean file that reloads fully
+    for key, outcome in entries.items():
+        cache.store(key, outcome)
+    cache.save()
+    again = _reload(path)
+    assert again.loaded_entries == len(entries)
+    assert again.health["corrupt_quarantined"] == 0
+    for key, outcome in entries.items():
+        assert again.peek(key) == outcome
+
+
+def test_flipped_payload_byte_fails_digest(tmp_path):
+    path = str(tmp_path / "cache.inv")
+    _populate(path)
+    blob = bytearray(open(path, "rb").read())
+    blob[-3] ^= 0x40                        # single-bit-ish rot in payload
+    with open(path, "wb") as f:
+        f.write(bytes(blob))
+    cache = _reload(path)
+    assert cache.loaded_entries == 0
+    assert cache.health["corrupt_quarantined"] == 1
+    assert (tmp_path / "cache.inv.corrupt").exists()
+
+
+def test_version_mismatch_counted_not_quarantined(tmp_path):
+    path = str(tmp_path / "cache.inv")
+    with open(path, "wb") as f:
+        pickle.dump({"magic": _MAGIC,
+                     "version": ENGINE_CACHE_VERSION + 1}, f)
+        f.write(b"whatever follows")
+    cache = _reload(path)
+    assert cache.loaded_entries == 0
+    assert cache.health["version_skew"] == 1
+    assert cache.health["corrupt_quarantined"] == 0
+    # legitimately foreign: the blob survives for the engine that wrote it
+    assert (tmp_path / "cache.inv").exists()
+    assert not (tmp_path / "cache.inv.corrupt").exists()
+
+
+def test_foreign_garbage_quarantined(tmp_path):
+    path = str(tmp_path / "cache.inv")
+    with open(path, "wb") as f:
+        f.write(b"not a cache blob at all")
+    cache = _reload(path)
+    assert cache.loaded_entries == 0
+    assert cache.health["corrupt_quarantined"] == 1
+    assert (tmp_path / "cache.inv.corrupt").exists()
+
+
+def test_injected_read_corruption_quarantines(tmp_path):
+    """The invcache.load fault site models rot *between* disk and parse:
+    a byte flips in memory, the digest check catches it, the (actually
+    intact) file is quarantined, and a fault-free reload of the rebuilt
+    file is complete."""
+    path = str(tmp_path / "cache.inv")
+    entries = _populate(path)
+    with faults.injected(faults.FaultPlan(seed=9, faults={
+            "invcache.load": faults.FaultSpec(at=(0,))})):
+        cache = InvariantCache(path)
+    assert cache.loaded_entries == 0
+    assert cache.health["corrupt_quarantined"] == 1
+    assert cache.stats()["health"]["corrupt_quarantined"] == 1
+
+    for key, outcome in entries.items():
+        cache.store(key, outcome)
+    cache.save()
+    clean = _reload(path)
+    assert clean.loaded_entries == len(entries)
+    assert clean.health == {"corrupt_quarantined": 0, "version_skew": 0,
+                            "load_errors": 0}
+
+
+def test_unreadable_file_counts_load_error(tmp_path, monkeypatch):
+    path = str(tmp_path / "cache.inv")
+    _populate(path)
+
+    def denied(*a, **kw):
+        raise OSError("injected EACCES")
+
+    monkeypatch.setattr("builtins.open", denied)
+    cache = InvariantCache(path)
+    monkeypatch.undo()
+    assert cache.loaded_entries == 0
+    assert cache.health["load_errors"] == 1
+    assert (tmp_path / "cache.inv").exists()    # I/O errors never quarantine
+
+
+def test_hold_store_race_with_eviction():
+    """Concurrent sweeps (repro.serve shares one cache across scheduler
+    work) hold the cache while storing; eviction must only run once every
+    hold has exited, and racing stores must never corrupt the accounting
+    or drop an in-flight sweep's entries."""
+    cache = InvariantCache(max_entries=8)
+    errors = []
+    barrier = threading.Barrier(4)
+
+    def sweep(worker):
+        try:
+            barrier.wait(timeout=10)
+            with cache.hold():
+                for i in range(200):
+                    key = ("w", worker, i)
+                    cache.store(key, ("ok", i))
+                    # inside the hold nothing may be evicted from under us
+                    assert cache.peek(key) == ("ok", i)
+        except Exception as exc:  # noqa: BLE001 — surfaced to the test
+            errors.append(exc)
+
+    threads = [threading.Thread(target=sweep, args=(w,)) for w in range(4)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join(timeout=30)
+    assert not errors
+    assert not any(t.is_alive() for t in threads)
+    # all holds exited: the deferred eviction pass enforced the budget
+    assert len(cache) <= 8
+    assert cache.evictions >= 4 * 200 - 8
+
+
+def test_nested_holds_defer_eviction_to_outermost_exit():
+    cache = InvariantCache(max_entries=2)
+    with cache.hold():
+        with cache.hold():
+            for i in range(10):
+                cache.store(("k", i), ("ok", i))
+        assert len(cache) == 10             # inner exit must not evict
+    assert len(cache) <= 2
+
+
+def test_quarantine_survives_rename_failure(tmp_path, monkeypatch):
+    """A quarantine whose rename fails (e.g. read-only dir) still loads
+    cold and still counts — the health signal never depends on the rename
+    succeeding."""
+    path = str(tmp_path / "cache.inv")
+    with open(path, "wb") as f:
+        f.write(b"garbage")
+
+    def no_rename(src, dst):
+        raise OSError("read-only filesystem")
+
+    monkeypatch.setattr("os.replace", no_rename)
+    cache = InvariantCache(path)
+    assert cache.loaded_entries == 0
+    assert cache.health["corrupt_quarantined"] == 1
+
+
+def test_err_outcomes_roundtrip_after_damage_rebuild(tmp_path):
+    """Cached *errors* (skip records) survive the quarantine/rebuild cycle:
+    a rebuilt cache must keep skipping degenerate configs in O(1)."""
+    path = str(tmp_path / "cache.inv")
+    cache = InvariantCache(path)
+    cache.store(("bad", 1), ("err", ValueError("degenerate extent")))
+    cache.store(("good", 1), ("ok", 42))
+    cache.save()
+    with open(path, "wb") as f:
+        f.write(b"zapped")
+    damaged = InvariantCache(path)
+    assert damaged.health["corrupt_quarantined"] == 1
+    damaged.store(("bad", 1), ("err", ValueError("degenerate extent")))
+    damaged.store(("good", 1), ("ok", 42))
+    damaged.save()
+    rebuilt = InvariantCache(path)
+    assert rebuilt.loaded_entries == 2
+    kind, exc = rebuilt.peek(("bad", 1))
+    assert kind == "err" and isinstance(exc, ValueError)
+    assert rebuilt.peek(("good", 1)) == ("ok", 42)
