@@ -3,9 +3,15 @@
 Prints ``name,us_per_call,derived`` CSV rows (see DESIGN.md §6 for the
 figure-to-module index).  ``python -m benchmarks.run [module ...]`` runs a
 subset.
+
+Set ``REPRO_TRACE_DIR=<dir>`` to capture one Perfetto-loadable Chrome
+trace per module (``<dir>/<module>.trace.json``, DESIGN.md §14): telemetry
+is enabled for the whole run and the span buffer is dumped and reset
+between modules, so each trace shows exactly that benchmark's pipeline.
 """
 from __future__ import annotations
 
+import os
 import sys
 import time
 import traceback
@@ -30,9 +36,27 @@ MODULES = [
 ]
 
 
+def _dump_trace(trace_dir: str | None, name: str) -> None:
+    if not trace_dir:
+        return
+    from repro import obs
+
+    if obs.spans():
+        path = os.path.join(trace_dir, f"{name}.trace.json")
+        print(f"# wrote {obs.write_trace(path)}", flush=True)
+    obs.reset()
+    obs.enable()        # a bench may have toggled telemetry; re-arm
+
+
 def main() -> None:
     import importlib
 
+    trace_dir = os.environ.get("REPRO_TRACE_DIR")
+    if trace_dir:
+        from repro import obs
+
+        os.makedirs(trace_dir, exist_ok=True)
+        obs.enable()
     selected = sys.argv[1:] or MODULES
     failures = []
     for name in selected:
@@ -45,6 +69,8 @@ def main() -> None:
         except Exception:
             failures.append(name)
             print(f"# {name} FAILED:\n{traceback.format_exc()}", flush=True)
+        finally:
+            _dump_trace(trace_dir, name)
     if failures:
         print(f"# FAILURES: {failures}")
         sys.exit(1)

@@ -221,6 +221,21 @@ def check_chaos_soak(gate: Gate, base: dict, cur: dict, slack: float):
                True, cur["pool_recovery_rebuilds"] >= 1)
 
 
+def check_obs(gate: Gate, base: dict, cur: dict, slack: float):
+    # the telemetry contract (DESIGN.md §14) is boolean and deterministic:
+    # zero-perturbation rankings, <2% disabled overhead, >=90% span
+    # coverage, cross-process merge, and a loadable Chrome trace
+    for flag in ("rankings_identical", "overhead_ok", "coverage_ok",
+                 "worker_spans_merged", "trace_valid", "phases_present"):
+        gate.equal(f"obs: {flag}", True, bool(cur[flag]))
+    # per-phase time gate: the walk task's share of structural task wall
+    # time — intra-run and hardware-portable, but share micro-timing is
+    # noisy, so widen 4x to catch only a phase falling off a cliff
+    gate.ratio("obs: walk-task share of structural wall time",
+               float(base["walk_share"]), float(cur["walk_share"]),
+               slack * 4.0, higher_is_better=False)
+
+
 CHECKS = {
     "perf_ranking": check_perf_ranking,
     "pruned_search": check_pruned_search,
@@ -230,6 +245,7 @@ CHECKS = {
     "cachesim_core": check_cachesim_core,
     "serve_soak": check_serve_soak,
     "chaos_soak": check_chaos_soak,
+    "obs": check_obs,
 }
 
 

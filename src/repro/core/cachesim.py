@@ -29,6 +29,8 @@ from collections import OrderedDict
 
 import numpy as np
 
+from repro import obs
+
 from .access import KernelSpec, LaunchConfig
 from .gridwalk import (
     CORE_STATS,
@@ -407,6 +409,12 @@ def simulate_l1_block(
     scaled by 1/blocks_per_sm (inter-block sharing considered unlikely,
     paper §4.3).
     """
+    with obs.span("cachesim.replay", "cachesim", level="l1"):
+        return _simulate_l1_block(spec, launch, machine, domain, block_idx,
+                                  oracle)
+
+
+def _simulate_l1_block(spec, launch, machine, domain, block_idx, oracle):
     domain = domain or spec.domain
     bps = occupancy_blocks_per_sm(launch, machine.max_threads_per_sm)
     if oracle if oracle is not None else _oracle_default():
@@ -504,6 +512,13 @@ def simulate_l2_waves(
     cache; counters run only while the measured wave executes.  Warp
     instructions of a wave's blocks are interleaved round-robin.
     """
+    with obs.span("cachesim.replay", "cachesim", level="l2"):
+        return _simulate_l2_waves(spec, launch, machine, domain, warm_waves,
+                                  measure_waves, max_warm_blocks, oracle)
+
+
+def _simulate_l2_waves(spec, launch, machine, domain, warm_waves,
+                       measure_waves, max_warm_blocks, oracle):
     domain = domain or spec.domain
     grid, wave_blocks, waves = _l2_schedule(
         launch, machine, domain, warm_waves, measure_waves, max_warm_blocks)

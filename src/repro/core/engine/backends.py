@@ -45,6 +45,8 @@ estimate's float ops and is therefore sound without any margin.
 """
 from __future__ import annotations
 
+from repro import obs
+
 from ..access import KernelSpec, LaunchConfig
 from ..capacity import CapacityModel
 from ..footprint import footprint_bytes
@@ -80,21 +82,23 @@ def _interior_boxes(spec: KernelSpec, launch: LaunchConfig, domain: tuple):
 def gpu_block_task(spec: KernelSpec, launch: LaunchConfig, domain: tuple) -> tuple:
     """Interior-block footprints (32B load/store sectors, 128B alloc lines)
     via implicit sets — property-tested equal to the gridwalk oracle."""
-    boxes = _interior_boxes(spec, launch, domain)
-    return (
-        footprint_bytes(spec.loads, boxes, 32),
-        footprint_bytes(spec.accesses, boxes, 128),
-        footprint_bytes(spec.stores, boxes, 32),
-    )
+    with obs.span("engine.task.footprint", "task"):
+        boxes = _interior_boxes(spec, launch, domain)
+        return (
+            footprint_bytes(spec.loads, boxes, 32),
+            footprint_bytes(spec.accesses, boxes, 128),
+            footprint_bytes(spec.stores, boxes, 32),
+        )
 
 
 def gpu_walk_task(spec: KernelSpec, launch: LaunchConfig, domain: tuple) -> tuple:
     """L1 bank-conflict cycles + per-warp sector-request upper bound, on the
     vectorized walk (bitwise-equal to the per-warp loop oracle)."""
-    return (
-        walk_block_l1_fast(spec, launch, domain),
-        warp_sector_requests_fast(spec, launch, 32, domain),
-    )
+    with obs.span("engine.task.walk", "task"):
+        return (
+            walk_block_l1_fast(spec, launch, domain),
+            warp_sector_requests_fast(spec, launch, 32, domain),
+        )
 
 
 def gpu_wave_front_task(spec: KernelSpec, launch: LaunchConfig,
@@ -103,18 +107,20 @@ def gpu_wave_front_task(spec: KernelSpec, launch: LaunchConfig,
     footprint is fed from the implicit-set path (== oracle) instead of
     re-enumerating.  Takes the machine *geometry*, not the machine: the
     cached value is shared by every rate variant (DESIGN.md §11)."""
-    store_bytes = footprint_bytes(
-        spec.stores, _interior_boxes(spec, launch, domain),
-        geometry.sector_bytes
-    )
-    return dram_front_structure(spec, launch, geometry, domain,
-                                block_store_bytes=store_bytes)
+    with obs.span("engine.task.wave", "task", part="front"):
+        store_bytes = footprint_bytes(
+            spec.stores, _interior_boxes(spec, launch, domain),
+            geometry.sector_bytes
+        )
+        return dram_front_structure(spec, launch, geometry, domain,
+                                    block_store_bytes=store_bytes)
 
 
 def gpu_wave_overlap_task(spec: KernelSpec, launch: LaunchConfig,
                           geometry: GPUGeometry, domain: tuple) -> dict:
     """Wave ∩ layer overlap counts — the expensive wave-model intersections."""
-    return dram_overlap_structure(spec, launch, geometry, domain)
+    with obs.span("engine.task.wave", "task", part="overlap"):
+        return dram_overlap_structure(spec, launch, geometry, domain)
 
 
 class GPUBackend:

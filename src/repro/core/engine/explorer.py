@@ -39,6 +39,9 @@ import warnings
 from dataclasses import dataclass, field as dc_field
 from typing import Iterable, Sequence
 
+from repro import obs
+from repro.obs.metrics import cache_stats_view
+
 from ..capacity import CapacityModel
 from ..gridwalk import core_stats_snapshot
 from ..machines import GPUMachine, TPUMachine, TPU_V5E
@@ -223,9 +226,13 @@ class Explorer:
                  cache: InvariantCache | None = None,
                  cache_path: str | None = None, strict: bool = False,
                  cache_max_entries: int | None = None,
-                 cache_max_bytes: int | None = None):
+                 cache_max_bytes: int | None = None,
+                 trace_out: str | None = None):
         self.parallel = parallel
         self.max_workers = max_workers
+        self.trace_out = trace_out
+        if trace_out:
+            obs.enable()
         if cache is not None and cache_path is not None:
             raise ValueError("pass either cache or cache_path, not both")
         if cache is not None and (cache_max_entries is not None
@@ -415,7 +422,11 @@ class Explorer:
         machines = _as_list(machines)
         cells, undefined = self._build_cells(workloads, machines, configs)
         with self._sweep_lock:
-            report = self._bound_sweep(cells, top_k)
+            with obs.span("engine.bound_rank", kind="degraded",
+                          cells=len(cells)):
+                report = self._bound_sweep(cells, top_k)
+            if self.trace_out:
+                obs.write_trace(self.trace_out)
         for w, m, reason in undefined:
             report.skipped.append(
                 SkippedConfig(w.name, m.name, None, reason))
@@ -462,12 +473,13 @@ class Explorer:
                         backend=backend.name, index=idx,
                         config=_item_config(item), estimate=None,
                         perf=1.0 / max(bound, 1e-30), limiter="bound"))
-        report.cache_stats = {
-            "degraded": True,
-            "bound_evals": evals,
-            "hits": self.cache.hits - hits0,
-            "misses": self.cache.misses - misses0,
+        report.metrics = {
+            "engine.sweep.degraded": 1,
+            "engine.sweep.bound_evals": evals,
+            "engine.cache.hits": self.cache.hits - hits0,
+            "engine.cache.misses": self.cache.misses - misses0,
         }
+        report.cache_stats = cache_stats_view(report.metrics)
         report.wall_time_s = time.perf_counter() - t0
         self.save_cache()
         return report
@@ -499,7 +511,8 @@ class Explorer:
         written (0 when not persistent or already clean)."""
         with self._sweep_lock:
             if self.cache.path and self.cache.dirty:
-                return self.cache.save()
+                with obs.span("engine.save_cache"):
+                    return self.cache.save()
             return 0
 
     # ---- the staged core ----------------------------------------------
@@ -509,10 +522,16 @@ class Explorer:
         # Reentrancy: one sweep at a time per Explorer.  Concurrent service
         # requests queue here; the winner warms the invariant cache, so the
         # serialized followers are mostly cache replays.
+        kind = ("machine_axis" if machine_axis
+                else "pruned" if top_k is not None else "exhaustive")
         with self._sweep_lock:
-            return self._sweep_impl(cells, strict=strict, top_k=top_k,
-                                    progress=progress,
-                                    machine_axis=machine_axis)
+            with obs.span("engine.sweep", kind=kind, cells=len(cells)):
+                report = self._sweep_impl(cells, strict=strict, top_k=top_k,
+                                          progress=progress,
+                                          machine_axis=machine_axis)
+            if self.trace_out:
+                obs.write_trace(self.trace_out)
+            return report
 
     def _sweep_impl(self, cells, *, strict: bool | None = None,
                     top_k: int | None = None, progress=None,
@@ -584,62 +603,70 @@ class Explorer:
             exhaustive = [r for r in scalar_runs if not r.prune]
             pruned_runs = [r for r in scalar_runs if r.prune]
             if exhaustive:
-                self._run_exhaustive(exhaustive, pool, strict, stats,
-                                     _advance)
+                with obs.span("engine.exact", cells=len(exhaustive)):
+                    self._run_exhaustive(exhaustive, pool, strict, stats,
+                                         _advance)
             if pruned_runs:
                 self._run_pruned(pruned_runs, pool, strict, stats, _advance)
             if axis_groups:
-                self._run_machine_axis(axis_groups, pool, strict, stats,
-                                       _advance)
+                with obs.span("engine.axis", groups=len(axis_groups)):
+                    self._run_machine_axis(axis_groups, pool, strict, stats,
+                                           _advance)
 
         report = ExplorationReport()
-        for wname, run in sources:
-            if run.wname == wname:
-                report.entries.extend(run.ranked_entries())
-                report.skipped.extend(run.skips)
-                report.pruned.extend(run.pruned)
-                continue
-            # direct construction: dataclasses.replace dominated suite
-            # sweeps at ~180k clones per run
-            report.entries.extend(
-                EvalResult(wname, e.machine, e.backend, e.index, e.config,
-                           e.estimate, e.perf, e.limiter)
-                for e in run.ranked_entries())
-            report.skipped.extend(
-                SkippedConfig(wname, s.machine, s.config, s.reason)
-                for s in run.skips)
-            report.pruned.extend(
-                PrunedConfig(wname, p.machine, p.config, p.bound, p.threshold)
-                for p in run.pruned)
-            _advance(len(run.items))
-        # per-sweep deltas (a reused Explorer's cache is cumulative)
-        report.cache_stats = {
-            "hits": self.cache.hits - hits0,
-            "misses": self.cache.misses - misses0,
-            "entries": len(self.cache),
-            "evictions": self.cache.evictions - evict0,
-            "pool_tasks": stats["pool_tasks"],
-            "bound_evals": stats["bound_evals"],
-            "cells": len(runs),
-            "shared_cells": stats["shared_cells"],
-            "evaluated": sum(len(r.results) for r in runs),
-            "pruned": sum(len(r.pruned) for r in runs),
+        with obs.span("engine.rank", cells=len(sources)):
+            for wname, run in sources:
+                if run.wname == wname:
+                    report.entries.extend(run.ranked_entries())
+                    report.skipped.extend(run.skips)
+                    report.pruned.extend(run.pruned)
+                    continue
+                # direct construction: dataclasses.replace dominated suite
+                # sweeps at ~180k clones per run
+                report.entries.extend(
+                    EvalResult(wname, e.machine, e.backend, e.index, e.config,
+                               e.estimate, e.perf, e.limiter)
+                    for e in run.ranked_entries())
+                report.skipped.extend(
+                    SkippedConfig(wname, s.machine, s.config, s.reason)
+                    for s in run.skips)
+                report.pruned.extend(
+                    PrunedConfig(wname, p.machine, p.config, p.bound,
+                                 p.threshold)
+                    for p in run.pruned)
+                _advance(len(run.items))
+        # canonical per-sweep metric deltas (a reused Explorer's cache is
+        # cumulative); report.cache_stats is the backward-compatible view
+        metrics = {
+            "engine.cache.hits": self.cache.hits - hits0,
+            "engine.cache.misses": self.cache.misses - misses0,
+            "engine.cache.entries": len(self.cache),
+            "engine.cache.evictions": self.cache.evictions - evict0,
+            "engine.sweep.pool_tasks": stats["pool_tasks"],
+            "engine.sweep.bound_evals": stats["bound_evals"],
+            "engine.sweep.cells": len(runs),
+            "engine.sweep.shared_cells": stats["shared_cells"],
+            "engine.sweep.evaluated": sum(len(r.results) for r in runs),
+            "engine.sweep.pruned": sum(len(r.pruned) for r in runs),
         }
         for k in ("geometry_groups", "machines_batched", "geometry_share"):
             if k in stats:
-                report.cache_stats[k] = stats[k]
+                metrics[f"engine.axis.{k}"] = stats[k]
         # self-healing pool events (rebuilds after crashed/hung workers,
         # quarantined tasks) surface on the report so service callers can
-        # alert; absent on every healthy sweep
-        if any(pool.health.values()):
-            report.cache_stats["pool_health"] = dict(pool.health)
+        # alert; the legacy view carries them only when an event fired
+        metrics.update(
+            {f"pool.health.{k}": v for k, v in pool.health.items()})
         # cache-metric core deltas (DESIGN §10).  Process-local: tasks that
         # ran in pool workers count in the worker, not here, so parallel
         # sweeps under-report — serial sweeps (and the cachesim benches)
         # see the full picture.
-        report.cache_stats.update({
-            k: v - core0[k] for k, v in core_stats_snapshot().items()
+        metrics.update({
+            f"core.{k}": v - core0[k]
+            for k, v in core_stats_snapshot().items()
         })
+        report.metrics = metrics
+        report.cache_stats = cache_stats_view(metrics)
         report.wall_time_s = time.perf_counter() - t0
         self.save_cache()
         return report
@@ -728,37 +755,39 @@ class Explorer:
         # bound stage: resolve the cheap bound tasks for every item in one
         # batched pool pass (cached — warm runs and extent-sharing configs
         # pay nothing), then order each cell's items best-bound-first
-        bound_tasks_per_run = []
-        all_bound_tasks = []
-        for run in runs:
-            per_item = [run.backend.bound_tasks(item, run.machine)
-                        for item in run.items]
-            bound_tasks_per_run.append(per_item)
-            for tl in per_item:
-                all_bound_tasks.extend(tl)
-        pool_before = stats["pool_tasks"]
-        self._resolve_batch(all_bound_tasks, pool, stats)
-        # bound evaluations are accounted separately from structural work
-        stats["bound_evals"] += stats["pool_tasks"] - pool_before
-        stats["pool_tasks"] = pool_before
+        with obs.span("engine.bounds", cells=len(runs)) as _bsp:
+            bound_tasks_per_run = []
+            all_bound_tasks = []
+            for run in runs:
+                per_item = [run.backend.bound_tasks(item, run.machine)
+                            for item in run.items]
+                bound_tasks_per_run.append(per_item)
+                for tl in per_item:
+                    all_bound_tasks.extend(tl)
+            pool_before = stats["pool_tasks"]
+            self._resolve_batch(all_bound_tasks, pool, stats)
+            # bound evaluations are accounted separately from structural work
+            stats["bound_evals"] += stats["pool_tasks"] - pool_before
+            stats["pool_tasks"] = pool_before
+            _bsp.add(bound_evals=stats["bound_evals"])
 
-        for run, per_item in zip(runs, bound_tasks_per_run):
-            states = []
-            for idx, (item, tl) in enumerate(zip(run.items, per_item)):
-                st = _Item(index=idx, item=item)
-                err = self._read_values(tl, st.values, strict)
-                if err is not None:
-                    self._skip(run, item, err)
-                    st.done = True
-                    advance(1)
-                else:
-                    st.bound = run.backend.tier_bound(item, run.machine,
-                                                      st.values)
-                states.append(st)
-            # stable best-bound-first order; index breaks ties so the
-            # refinement schedule (and thus every threshold update) is
-            # deterministic
-            run.states = sorted(states, key=lambda s: (s.bound, s.index))
+            for run, per_item in zip(runs, bound_tasks_per_run):
+                states = []
+                for idx, (item, tl) in enumerate(zip(run.items, per_item)):
+                    st = _Item(index=idx, item=item)
+                    err = self._read_values(tl, st.values, strict)
+                    if err is not None:
+                        self._skip(run, item, err)
+                        st.done = True
+                        advance(1)
+                    else:
+                        st.bound = run.backend.tier_bound(item, run.machine,
+                                                          st.values)
+                    states.append(st)
+                # stable best-bound-first order; index breaks ties so the
+                # refinement schedule (and thus every threshold update) is
+                # deterministic
+                run.states = sorted(states, key=lambda s: (s.bound, s.index))
 
         # refinement rounds: each round advances the best-bound frontier of
         # every cell by one tier (cross-cell batched through one pool call),
@@ -769,6 +798,13 @@ class Explorer:
         # meet an already-converged threshold — advancing every survivor at
         # once would freeze the threshold at its seed value and refine
         # nearly everything.
+        with obs.span("engine.refine", cells=len(runs)) as sp:
+            sp.add(rounds=self._refine_loop(runs, pool, strict, stats,
+                                            advance))
+
+    def _refine_loop(self, runs, pool, strict, stats, advance) -> int:
+        """Refinement rounds of the pruned path; returns rounds run."""
+        rounds = 0
         while True:
             round_work = []  # (run, state, tier tasks)
             for run in runs:
@@ -791,7 +827,8 @@ class Explorer:
                                     run.backend.tiers(st.item, run.machine)]
                     round_work.append((run, st, st.tiers[st.tier]))
             if not round_work:
-                break
+                return rounds
+            rounds += 1
             self._resolve_batch(
                 [t for _, _, tasks in round_work for t in tasks], pool, stats)
             for run, st, tasks in round_work:
@@ -859,8 +896,10 @@ class Explorer:
                     live_values.append(values)
             live_items = [g.items[i] for i in live_idx]
             if live_items:
-                orders, skip_lists = g.backend.batch_order(
-                    live_items, live_values, machines)
+                with obs.span("engine.rate", items=len(live_items),
+                              machines=len(machines)):
+                    orders, skip_lists = g.backend.batch_order(
+                        live_items, live_values, machines)
             else:
                 orders = [[] for _ in machines]
                 skip_lists = [[] for _ in machines]

@@ -37,7 +37,8 @@ import time
 from concurrent.futures import ProcessPoolExecutor
 from typing import Sequence
 
-from repro import faults
+from repro import faults, obs
+from repro.obs.metrics import CounterGroup
 
 # Chunks submitted per worker per run: enough slack for load balancing
 # between uneven task costs, few enough that IPC stays amortized.
@@ -71,7 +72,7 @@ def guarded_batch(calls: Sequence[tuple]) -> list:
     return [guarded_call(fn, args) for fn, args in calls]
 
 
-def _pool_batch(calls: Sequence[tuple]) -> list:
+def _pool_batch(calls: Sequence[tuple], ctx: tuple | None = None):
     """Worker-process chunk entry point.
 
     The crash/hang fault-injection sites live only here — never on the
@@ -79,11 +80,23 @@ def _pool_batch(calls: Sequence[tuple]) -> list:
     never the parent.  ``ensure_env_plan`` makes forked workers (which
     inherit parent module state from before the plan was installed) and
     spawned/forkserver workers (fresh interpreters) adopt the env plan.
+
+    ``ctx`` is the parent's telemetry context (``obs.current_context()``),
+    shipped through task metadata under the same fork/spawn discipline as
+    the fault plan.  When present, the chunk runs under a ``pool.chunk``
+    child span and returns ``("obs", outcomes, records)`` so the parent can
+    merge the worker's spans into its timeline; when absent (telemetry
+    disabled) the return shape is the plain outcome list, unchanged.
     """
     faults.ensure_env_plan()
     faults.crash_point("pool.worker_crash")
     faults.hang_point("pool.worker_hang")
-    return guarded_batch(calls)
+    if ctx is None:
+        return guarded_batch(calls)
+    obs.adopt(ctx)
+    with obs.span("pool.chunk", "pool", tasks=len(calls)):
+        out = guarded_batch(calls)
+    return ("obs", out, obs.drain())
 
 
 def default_workers() -> int:
@@ -192,8 +205,13 @@ class TaskPool:
             else _default_deadline())
         self.max_retries = max_retries
         self.backoff_base_s = backoff_base_s
-        self.health = {"rebuilds": 0, "retries": 0, "hung_chunks": 0,
-                       "broken_pools": 0, "quarantined": 0}
+        self.health = CounterGroup("pool.health", {
+            "rebuilds": "executors torn down and rebuilt after a failure",
+            "retries": "retry rounds over failed chunks",
+            "hung_chunks": "chunks past the per-chunk deadline",
+            "broken_pools": "worker-death (BrokenProcessPool) events",
+            "quarantined": "tasks outcome-ified as PoisonTaskError",
+        })
         self._executor = None
         self._broken = False
 
@@ -247,11 +265,14 @@ class TaskPool:
     def run(self, calls: Sequence[tuple]) -> list:
         """Evaluate ``[(fn, args), ...]``, outcomes in input order."""
         calls = list(calls)
-        if not (self.parallel and self.workers > 1 and len(calls) > 1):
-            return guarded_batch(calls)
-        if self._ensure_executor() is None:
-            return guarded_batch(calls)
-        return self._run_parallel(calls)
+        if not calls:
+            return []
+        with obs.span("pool.run", "pool", tasks=len(calls)):
+            if not (self.parallel and self.workers > 1 and len(calls) > 1):
+                return guarded_batch(calls)
+            if self._ensure_executor() is None:
+                return guarded_batch(calls)
+            return self._run_parallel(calls)
 
     def _run_parallel(self, calls: list) -> list:
         outcomes: list = [None] * len(calls)
@@ -259,6 +280,9 @@ class TaskPool:
                         self.workers * _CHUNKS_PER_WORKER)
         stall = 0       # consecutive rounds that resolved nothing
         split = False   # already escalated to single-task groups?
+        # telemetry context rides in the chunk payload (like the fault
+        # plan): workers under any start method parent their spans here
+        ctx = obs.current_context()
         while groups:
             ex = self._ensure_executor()
             if ex is None:
@@ -269,7 +293,8 @@ class TaskPool:
                             [calls[i] for i in g])):
                         outcomes[i] = out
                 return outcomes
-            futures = [(g, ex.submit(_pool_batch, [calls[i] for i in g]))
+            futures = [(g, ex.submit(_pool_batch,
+                                     [calls[i] for i in g], ctx))
                        for g in groups]
             failed, broken, progress = [], False, False
             for g, f in futures:
@@ -294,6 +319,9 @@ class TaskPool:
                     self.health["broken_pools"] += 1
                     failed.append(g)
                     continue
+                if isinstance(res, tuple) and res and res[0] == "obs":
+                    obs.ingest(res[2])
+                    res = res[1]
                 for i, out in zip(g, res):
                     outcomes[i] = out
                 progress = True

@@ -157,6 +157,13 @@ class ExplorationReport:
     ``streams_shared`` stream-table constructions vs memo hits, and
     ``waves_folded`` / ``wave_fallbacks`` simulator waves served by pure
     translation vs rebuilt per block.
+
+    ``metrics`` (DESIGN.md §14) carries the same per-sweep deltas under
+    their canonical dotted names (``engine.cache.hits``,
+    ``engine.sweep.evaluated``, ``pool.health.rebuilds``, ...);
+    ``cache_stats`` is the backward-compatible view derived from it
+    (``repro.obs.metrics.cache_stats_view``).  Appended last so older
+    serialized reports decode with an empty mapping.
     """
 
     entries: list = dc_field(default_factory=list)        # list[EvalResult]
@@ -164,6 +171,7 @@ class ExplorationReport:
     pruned: list = dc_field(default_factory=list)         # list[PrunedConfig]
     cache_stats: dict = dc_field(default_factory=dict)
     wall_time_s: float = 0.0
+    metrics: dict = dc_field(default_factory=dict)
 
     # ---- structure -----------------------------------------------------
     def cells(self) -> list:
@@ -208,11 +216,19 @@ class ExplorationReport:
     def prune_rate(self) -> float:
         """Fraction of refinable configurations eliminated by bounds alone.
 
-        Computed from ``cache_stats`` (``entries`` is truncated to top-k, so
-        counting it would overstate pruning whenever more than k configs
-        were fully evaluated)."""
-        pruned = self.cache_stats.get("pruned", len(self.pruned))
-        total = self.cache_stats.get("evaluated", len(self.entries)) + pruned
+        Derived from the canonical per-sweep metrics (``entries`` is
+        truncated to top-k, so counting it would overstate pruning whenever
+        more than k configs were fully evaluated; the old ``len(entries)``
+        fallback had exactly that bug on reports whose ``cache_stats`` view
+        was stripped).  ``cache_stats`` is consulted for hand-built /
+        legacy-decoded reports that never carried ``metrics``."""
+        pruned = self.metrics.get(
+            "engine.sweep.pruned",
+            self.cache_stats.get("pruned", len(self.pruned)))
+        evaluated = self.metrics.get(
+            "engine.sweep.evaluated",
+            self.cache_stats.get("evaluated", len(self.entries)))
+        total = evaluated + pruned
         return pruned / total if total else 0.0
 
     # ---- attribution ---------------------------------------------------

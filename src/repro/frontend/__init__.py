@@ -56,14 +56,17 @@ def trace_payload(call_fn, args, *, name: str = "kernel",
     the payload: the engine turns it into a per-GPU-machine skip with the
     tracer's actual diagnostic as the reason.
     """
+    from repro import obs
     from repro.core.engine import RejectedSpec
 
-    traced = trace_kernel(call_fn, args, name=name, trace_body=True)
-    tpu_spec = lower_tpu(traced, costs, name=name)
-    try:
-        gpu_spec = lower_gpu(traced, costs, name=name, rename=rename)
-    except TraceError as e:
-        gpu_spec = RejectedSpec(name, str(e))
+    with obs.span("frontend.trace", "frontend", kernel=name):
+        traced = trace_kernel(call_fn, args, name=name, trace_body=True)
+    with obs.span("frontend.lower", "frontend", kernel=name):
+        tpu_spec = lower_tpu(traced, costs, name=name)
+        try:
+            gpu_spec = lower_gpu(traced, costs, name=name, rename=rename)
+        except TraceError as e:
+            gpu_spec = RejectedSpec(name, str(e))
     return TracedSpecPayload(name=name, tpu_spec=tpu_spec, gpu_spec=gpu_spec)
 
 

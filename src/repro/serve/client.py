@@ -142,6 +142,16 @@ class PriceClient:
             raise _error_from(msg, "stats failed")
         return msg["stats"]
 
+    def trace(self) -> dict:
+        """The daemon's span timeline as Chrome trace-event JSON
+        (``{"traceEvents": [...]}``; empty while telemetry is disabled
+        server-side)."""
+        self._send({"op": "trace"})
+        msg = self._recv()
+        if not msg.get("ok"):
+            raise _error_from(msg, "trace failed")
+        return msg["trace"]
+
     def shutdown_server(self) -> None:
         self._send({"op": "shutdown"})
         try:

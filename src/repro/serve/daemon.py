@@ -9,13 +9,19 @@ message per line, every line carrying ``schema_version``.
 Client -> server ops:
     {"op": "price", "id": <any>, "request": <encoded PriceRequest>,
      "deadline_s": <optional seconds>}
-    {"op": "stats"} | {"op": "ping"} | {"op": "shutdown"}
+    {"op": "stats"} | {"op": "trace"} | {"op": "ping"} | {"op": "shutdown"}
 
 Server -> client lines:
     {"ok": true, "op": "result", "id": ..., "digest": ..., "result": ...}
     {"ok": true, "op": "stats"/"pong"/"bye", ...}
+    {"ok": true, "op": "trace", "enabled": ..., "trace": <Chrome JSON>}
     {"ok": false, "id": ..., "error": "...", "error_class": "...",
      "retry_after_s": <only on backpressure rejections>}
+
+``stats`` carries the scheduler's live counters plus the process-wide
+``obs.metrics`` snapshot; ``trace`` ships the daemon's collected span
+timeline as Chrome trace-event JSON (empty while telemetry is disabled —
+start with ``--trace-out`` or ``REPRO_TRACE_OUT`` to collect).
 
 A connection may pipeline many ``price`` ops; results stream back **as
 they complete** (matched by ``id``, not by order) — a memo-hit answer for
@@ -39,7 +45,7 @@ import socketserver
 import sys
 import threading
 
-from repro import faults
+from repro import faults, obs
 from repro.core.engine import Explorer
 
 from .scheduler import QueueFullError, Scheduler
@@ -88,21 +94,28 @@ class _Handler(socketserver.StreamRequestHandler):
                     send({"ok": False, "error": f"bad message: {exc}",
                           "error_class": type(exc).__name__})
                     continue
-                if op == "ping":
-                    send({"ok": True, "op": "pong"})
-                elif op == "stats":
-                    send({"ok": True, "op": "stats",
-                          "stats": server.scheduler.stats()})
-                elif op == "shutdown":
-                    send({"ok": True, "op": "bye"})
-                    server.request_shutdown()
-                    return
-                elif op == "price":
-                    self._price(server, msg, send, submitted)
-                else:
-                    send({"ok": False, "id": msg.get("id"),
-                          "error": f"unknown op {op!r}",
-                          "error_class": "ValueError"})
+                # the span covers dispatch (for `price`: decode + submit;
+                # the sweep itself runs under the scheduler's serve.* spans)
+                with obs.span("daemon.op", "serve", op=str(op)):
+                    if op == "ping":
+                        send({"ok": True, "op": "pong"})
+                    elif op == "stats":
+                        send({"ok": True, "op": "stats",
+                              "stats": server.scheduler.stats()})
+                    elif op == "trace":
+                        send({"ok": True, "op": "trace",
+                              "enabled": obs.enabled(),
+                              "trace": obs.chrome_trace()})
+                    elif op == "shutdown":
+                        send({"ok": True, "op": "bye"})
+                        server.request_shutdown()
+                        return
+                    elif op == "price":
+                        self._price(server, msg, send, submitted)
+                    else:
+                        send({"ok": False, "id": msg.get("id"),
+                              "error": f"unknown op {op!r}",
+                              "error_class": "ValueError"})
         finally:
             # client gone: detach every future this connection still owns —
             # a queued request nobody is waiting for must not burn a sweep
@@ -266,7 +279,13 @@ def main(argv=None) -> int:
     ap.add_argument("--deadline-s", type=float, default=None,
                     help="default per-request deadline; past it requests "
                          "degrade to the closed-form bound ranking")
+    ap.add_argument("--trace-out", default=None,
+                    help="collect telemetry spans and write a Chrome "
+                         "trace-event JSON here on exit (live timelines "
+                         "via the 'trace' op)")
     args = ap.parse_args(argv)
+    if args.trace_out:
+        obs.enable()
     engine = Explorer(parallel=args.parallel, max_workers=args.max_workers,
                       cache_path=args.cache_path,
                       cache_max_entries=args.cache_max_entries,
@@ -278,6 +297,9 @@ def main(argv=None) -> int:
           f"(cache: {args.cache_path or 'in-memory'}, "
           f"{engine.cache.loaded_entries} entries warm)")
     clean = serve(args.socket, scheduler=scheduler)
+    if args.trace_out and obs.spans():
+        obs.write_trace(args.trace_out)
+        print(f"repro.serve: trace written to {args.trace_out}")
     return 0 if clean else 1
 
 

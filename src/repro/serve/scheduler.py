@@ -35,10 +35,16 @@ Robustness (DESIGN.md §13):
     before any engine work runs.
 
 Counters make all of this observable (and gateable): ``requests =
-memo_hits + dedupe_joins + keys_priced + cancelled`` always holds
-(``cancelled`` counts requests dropped before pricing; degraded
-resolutions are ordinary ``keys_priced``), and rejected submissions are
-counted separately — they were never accepted as requests.
+memo_hits + dedupe_joins + keys_priced + cancelled`` holds once the queue
+drains, and the *live* form ``requests = memo_hits + dedupe_joins +
+keys_priced + cancelled + pending`` holds at any instant of a ``stats()``
+snapshot (``pending`` counts accepted digests not yet resolved;
+``cancelled`` counts requests dropped before pricing; degraded
+resolutions are ordinary ``keys_priced``).  Rejected submissions are
+counted separately — they were never accepted as requests.  The counters
+live in a documented ``repro.obs.metrics.CounterGroup`` (``serve.*``), so
+they also surface in ``obs.metrics.snapshot()`` and the daemon's ``stats``
+op.
 """
 from __future__ import annotations
 
@@ -49,7 +55,9 @@ import time
 from collections import OrderedDict
 from concurrent.futures import Future
 
+from repro import obs
 from repro.api import PriceRequest, PriceResult, price, price_bounds
+from repro.obs.metrics import CounterGroup
 from repro.core.engine import (
     EvalResult,
     ExplorationReport,
@@ -147,8 +155,10 @@ def _split_report(merged, tag: str) -> ExplorationReport:
                 for p in merged.pruned if p.workload.startswith(tag)],
         cache_stats=dict(merged.cache_stats),
         wall_time_s=merged.wall_time_s,
+        metrics=dict(merged.metrics),
     )
     out.cache_stats["coalesced"] = True
+    out.metrics["serve.coalesced"] = 1
     return out
 
 
@@ -170,12 +180,18 @@ class Scheduler:
         self._lock = threading.Lock()
         self._wake = threading.Condition(self._lock)
         self._stop = False
-        self.counters = {
-            "requests": 0, "memo_hits": 0, "dedupe_joins": 0,
-            "keys_priced": 0, "errors": 0,
-            "coalesced_sweeps": 0, "coalesced_requests": 0,
-            "rejected": 0, "degraded": 0, "cancelled": 0,
-        }
+        self.counters = CounterGroup("serve", {
+            "requests": "submissions accepted (memo + join + queued)",
+            "memo_hits": "requests resolved from the result memo",
+            "dedupe_joins": "requests joined to an in-flight digest",
+            "keys_priced": "distinct digests priced (incl. degraded/errors)",
+            "errors": "pricings that resolved to an exception",
+            "coalesced_sweeps": "merged sweeps run for request groups",
+            "coalesced_requests": "requests served out of merged sweeps",
+            "rejected": "submissions bounced by queue backpressure",
+            "degraded": "requests answered with the bound-only ranking",
+            "cancelled": "queued requests dropped before any pricing",
+        })
         self._worker = threading.Thread(target=self._run, name="repro-serve",
                                         daemon=True)
         self._worker.start()
@@ -275,7 +291,13 @@ class Scheduler:
             out = dict(self.counters)
             out["memo_entries"] = len(self._memo)
             out["inflight"] = len(self._inflight) + len(self._queue)
+            # accepted digests not yet priced/cancelled — closes the live
+            # counter identity: requests == memo_hits + dedupe_joins +
+            # keys_priced + cancelled + pending at any instant (the lock
+            # makes counters and the in-flight table one atomic snapshot)
+            out["pending"] = len(self._inflight)
         out["engine_cache"] = self.engine.cache.stats()
+        out["metrics"] = obs.metrics.snapshot()
         return out
 
     def shutdown(self, wait: bool = True,
@@ -348,8 +370,10 @@ class Scheduler:
                     raise DeadlineExceeded(
                         f"deadline passed at {done}/{total} configs")
         try:
-            result = price(pending.request, engine=self.engine,
-                           progress=progress)
+            with obs.span("serve.price", "serve",
+                          digest=pending.digest[:12]):
+                result = price(pending.request, engine=self.engine,
+                               progress=progress)
         except DeadlineExceeded:
             self._serve_degraded(pending)
         except BaseException as exc:
@@ -361,7 +385,9 @@ class Scheduler:
         """Deadline blown: answer with the closed-form bound ranking,
         explicitly flagged, instead of timing out or going silent."""
         try:
-            result = price_bounds(pending.request, engine=self.engine)
+            with obs.span("serve.degraded", "serve",
+                          digest=pending.digest[:12]):
+                result = price_bounds(pending.request, engine=self.engine)
         except BaseException as exc:
             self._resolve(pending, None, exc)
             return
@@ -384,7 +410,8 @@ class Scheduler:
             machine_axis=tmpl.machine_axis,
         )
         try:
-            merged = price(merged_request, engine=self.engine)
+            with obs.span("serve.coalesce", "serve", requests=len(group)):
+                merged = price(merged_request, engine=self.engine)
         except BaseException as exc:
             for p in group:
                 self._resolve(p, None, exc)

@@ -28,6 +28,7 @@ from __future__ import annotations
 import math
 from dataclasses import dataclass, field as dc_field
 
+from repro import obs
 from repro.configs.base import SHAPES, ArchConfig, ShapeSpec
 from repro.core.access import LaunchConfig
 from repro.layers import shapes as lshapes
@@ -507,7 +508,8 @@ def lower_all(shape: ShapeSpec | str = "train_4k", batch: int = 1,
     for arch in (archs or ARCHS):
         cfg = get_config(arch)
         try:
-            plans[arch] = lower_model(cfg, shape, batch)
+            with obs.span("suite.lower", "suite", model=arch):
+                plans[arch] = lower_model(cfg, shape, batch)
         except UnsupportedShape:
             continue  # excluded cell (long-context on a quadratic arch)
     return plans

@@ -1,0 +1,165 @@
+"""The frozen ``report.cache_stats`` key schema (DESIGN.md §14).
+
+``cache_stats`` is a backward-compatible *view* over the canonical
+``report.metrics`` mapping; these tests pin the exact key set every sweep
+kind emits — plain/exhaustive, pruned, machine-axis, pooled (health
+events), served (coalesced), degraded (bound-only) — so a new counter
+cannot land without being declared in ``CACHE_STATS_KEYS`` (and therefore
+documented).  Plus the ``prune_rate`` regression the metrics registry
+fixes: the old ``len(entries)`` fallback understated the denominator on
+top-k-truncated reports.
+"""
+from concurrent.futures import Future
+
+import pytest
+
+from repro.api import gpu_request, price, price_bounds
+from repro.core.access import LaunchConfig
+from repro.core.designspace import gpu_rate_grid
+from repro.core.engine import Explorer, Workload
+from repro.core.machines import GPUMachine
+from repro.core.selector import enumerate_gpu_configs
+from repro.core.specs import star_stencil_3d
+from repro.obs.metrics import CACHE_STATS_KEYS
+
+SMALL = GPUMachine(
+    name="A100/8", n_sms=13, clock_hz=1.41e9, l1_bytes=192 * 1024,
+    l2_bytes=20 * 1024 * 1024 // 8, dram_bw=1400e9 / 8, l2_bw=5000e9 / 8,
+    peak_flops_dp=9.7e12 / 8,
+)
+SPEC = star_stencil_3d(r=1, domain=(16, 24, 32))
+CONFIGS = [LaunchConfig(block=b) for b in [(64, 4, 2), (32, 4, 4), (8, 8, 8)]]
+
+#: every full (non-degraded) sweep emits exactly these
+BASE_KEYS = frozenset({
+    "hits", "misses", "entries", "evictions", "pool_tasks", "bound_evals",
+    "cells", "shared_cells", "evaluated", "pruned",
+    "streams_built", "streams_shared", "waves_folded", "wave_fallbacks",
+})
+AXIS_KEYS = frozenset({"geometry_groups", "machines_batched",
+                       "geometry_share"})
+
+
+def test_plain_sweep_emits_exactly_the_base_keys():
+    rep = price(gpu_request(SPEC, SMALL, CONFIGS)).report
+    assert set(rep.cache_stats) == BASE_KEYS
+
+
+def test_pruned_sweep_emits_exactly_the_base_keys():
+    rep = price(gpu_request(SPEC, SMALL, enumerate_gpu_configs(128),
+                            top_k=3)).report
+    assert rep.pruned, "top_k sweep must actually prune"
+    assert set(rep.cache_stats) == BASE_KEYS
+
+
+def test_machine_axis_sweep_adds_exactly_the_axis_keys():
+    machines = gpu_rate_grid(SMALL, l2_scales=(0.5, 1.0),
+                             dram_bw_scales=(1.0,))
+    rep = Explorer()._explore([Workload(name="w", gpu_spec=SPEC)], machines,
+                              CONFIGS, top_k=2, machine_axis=True)
+    assert rep.cache_stats["machines_batched"] == len(machines)
+    assert set(rep.cache_stats) == BASE_KEYS | AXIS_KEYS
+
+
+def test_pool_health_key_appears_only_when_an_event_fired(monkeypatch):
+    import repro.core.engine.explorer as ex_mod
+
+    class _ScarredPool(ex_mod.TaskPool):
+        def __enter__(self):
+            self.health["rebuilds"] += 1
+            return super().__enter__()
+
+    monkeypatch.setattr(ex_mod, "TaskPool", _ScarredPool)
+    rep = price(gpu_request(SPEC, SMALL, CONFIGS)).report
+    assert set(rep.cache_stats) == BASE_KEYS | {"pool_health"}
+    assert set(rep.cache_stats["pool_health"]) == {
+        "rebuilds", "retries", "hung_chunks", "broken_pools", "quarantined"}
+    assert rep.cache_stats["pool_health"]["rebuilds"] == 1
+    assert rep.metrics["pool.health.rebuilds"] == 1
+
+
+def test_degraded_ranking_emits_exactly_the_degraded_keys():
+    rep = price_bounds(gpu_request(SPEC, SMALL, CONFIGS,
+                                   top_k=2)).report
+    assert rep.cache_stats["degraded"] is True
+    assert set(rep.cache_stats) == {"degraded", "bound_evals", "hits",
+                                    "misses"}
+
+
+def test_coalesced_split_reports_add_exactly_the_coalesced_key():
+    from repro.serve.scheduler import Scheduler, _Pending
+    from repro.serve.schema import request_digest
+
+    sched = Scheduler(Explorer(parallel=False))
+    try:
+        reqs = [gpu_request(star_stencil_3d(r=1, domain=d), SMALL, CONFIGS)
+                for d in [(16, 24, 32), (24, 24, 32)]]
+        pendings, futs = [], []
+        for r in reqs:
+            digest = request_digest(r)
+            p = _Pending(digest, r)
+            fut = Future()
+            p.futures.append(fut)
+            with sched._lock:
+                sched._inflight[digest] = p
+            pendings.append(p)
+            futs.append(fut)
+        sched._serve_coalesced(pendings)
+        for fut in futs:
+            rep = fut.result(120).report
+            assert rep.cache_stats["coalesced"] is True
+            assert set(rep.cache_stats) == BASE_KEYS | {"coalesced"}
+            assert rep.metrics["serve.coalesced"] == 1
+    finally:
+        sched.shutdown()
+
+
+def test_every_emitted_key_is_declared_in_the_frozen_schema():
+    reports = [
+        price(gpu_request(SPEC, SMALL, CONFIGS)).report,
+        price_bounds(gpu_request(SPEC, SMALL, CONFIGS)).report,
+        Explorer()._explore(
+            [Workload(name="w", gpu_spec=SPEC)],
+            gpu_rate_grid(SMALL, l2_scales=(0.5, 1.0),
+                          dram_bw_scales=(1.0,)),
+            CONFIGS, top_k=2, machine_axis=True),
+    ]
+    for rep in reports:
+        undeclared = set(rep.cache_stats) - set(CACHE_STATS_KEYS)
+        assert not undeclared, (
+            f"cache_stats keys {sorted(undeclared)} missing from "
+            f"CACHE_STATS_KEYS — declare + document them (DESIGN.md §14)")
+
+
+# ========================================================================
+# prune_rate: registry-backed, not truncation-biased
+# ========================================================================
+def test_prune_rate_survives_a_stripped_cache_stats_view():
+    rep = price(gpu_request(SPEC, SMALL, enumerate_gpu_configs(128),
+                            top_k=3)).report
+    evaluated = rep.metrics["engine.sweep.evaluated"]
+    pruned = rep.metrics["engine.sweep.pruned"]
+    assert pruned == len(rep.pruned)
+    assert evaluated > len(rep.entries), \
+        "top-k truncation must bite for this regression to be meaningful"
+    expected = pruned / (evaluated + pruned)
+    assert rep.prune_rate == expected
+
+    # a consumer that strips/replaces the legacy view (round-trips through
+    # an older schema, hand-edits the dict) must not change the rate: it
+    # now derives from the canonical metrics, not the view
+    rep.cache_stats = {}
+    assert rep.prune_rate == expected
+
+    # the old fallback divided by the *truncated* entry count — a
+    # different (overstated) number; pin that the fix actually moved it
+    naive = len(rep.pruned) / (len(rep.entries) + len(rep.pruned))
+    assert naive != pytest.approx(expected)
+
+
+def test_prune_rate_legacy_reports_without_metrics_still_work():
+    from repro.core.engine import ExplorationReport
+
+    legacy = ExplorationReport(cache_stats={"evaluated": 90, "pruned": 10})
+    assert legacy.prune_rate == pytest.approx(10 / 100)
+    assert ExplorationReport().prune_rate == 0.0
