@@ -54,15 +54,19 @@ def bench_json(name: str, payload: dict) -> str | None:
     Writes into ``$BENCH_JSON_DIR`` (CI uploads that directory as the
     ``bench-artifacts`` build artifact, capturing the perf trajectory per
     PR).  No-op when the variable is unset, so local runs stay side-effect
-    free.
+    free.  Atomic (``durable.atomic_write``): a benchmark killed
+    mid-write — crash-resume benches do that on purpose — never leaves a
+    torn baseline for ``scripts/check_bench.py`` to choke on.
     """
     out_dir = os.environ.get("BENCH_JSON_DIR")
     if not out_dir:
         return None
+    from repro import durable
+
     os.makedirs(out_dir, exist_ok=True)
     path = os.path.join(out_dir, f"BENCH_{name}.json")
-    with open(path, "w") as f:
-        json.dump(payload, f, indent=2, sort_keys=True, default=str)
+    durable.atomic_write(
+        path, json.dumps(payload, indent=2, sort_keys=True, default=str))
     print(f"# wrote {path}")
     return path
 

@@ -32,6 +32,7 @@ MODULES = [
     "bench_trace_extract",    # DESIGN §9 spec-extraction frontend parity/cost
     "bench_serve_soak",       # DESIGN §12 daemon warm latency + dedupe
     "bench_chaos_soak",       # DESIGN §13 failure model under fault injection
+    "bench_crash_resume",     # DESIGN §15 durability: kill/resume/restart
     "bench_roofline",         # §Roofline table (reads experiments/dryrun)
 ]
 

@@ -221,6 +221,30 @@ def check_chaos_soak(gate: Gate, base: dict, cur: dict, slack: float):
                True, cur["pool_recovery_rebuilds"] >= 1)
 
 
+def check_crash_resume(gate: Gate, base: dict, cur: dict, slack: float):
+    # the durability contract (DESIGN.md §15) is all-boolean and
+    # deterministic: a SIGKILL at any commit point loses at most the cell
+    # mid-commit, resume reproduces the fault-free answers bitwise, and a
+    # restarted daemon is warm from its journals
+    for flag in ("storm_all_sigkilled", "storm_identical", "resumed_all",
+                 "repriced_ok", "torn_detected", "torn_tail_quarantined",
+                 "torn_kept_committed_prefix", "torn_reprice_identical",
+                 "torn_journal_healed", "restart_pidfile_ok",
+                 "restart_identical", "restart_memo_restored",
+                 "restart_answered_warm", "restart_client_rode_window",
+                 "restart_warm_p50_ok", "sigterm_clean"):
+        gate.equal(f"crash_resume: {flag}", True, bool(cur[flag]))
+    gate.equal("crash_resume: storm run count", base["storm_runs"],
+               cur["storm_runs"])
+    gate.equal("crash_resume: cell count", base["n_cells"], cur["n_cells"])
+    # a fully-resumed pass vs pricing cold: intra-run and
+    # hardware-portable, but dominated by journal I/O micro-timing —
+    # widen 4x so it only catches resume falling back to re-pricing
+    gate.ratio("crash_resume: resume speedup over cold pricing",
+               float(base["resume_speedup"]), float(cur["resume_speedup"]),
+               slack * 4.0, higher_is_better=True)
+
+
 def check_obs(gate: Gate, base: dict, cur: dict, slack: float):
     # the telemetry contract (DESIGN.md §14) is boolean and deterministic:
     # zero-perturbation rankings, <2% disabled overhead, >=90% span
@@ -245,6 +269,7 @@ CHECKS = {
     "cachesim_core": check_cachesim_core,
     "serve_soak": check_serve_soak,
     "chaos_soak": check_chaos_soak,
+    "crash_resume": check_crash_resume,
     "obs": check_obs,
 }
 

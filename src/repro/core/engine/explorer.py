@@ -33,20 +33,24 @@ from __future__ import annotations
 
 import bisect
 import dataclasses
+import hashlib
+import json
+import os
+import pickle
 import threading
 import time
 import warnings
 from dataclasses import dataclass, field as dc_field
 from typing import Iterable, Sequence
 
-from repro import obs
+from repro import durable, obs
 from repro.obs.metrics import cache_stats_view
 
 from ..capacity import CapacityModel
 from ..gridwalk import core_stats_snapshot
 from ..machines import GPUMachine, TPUMachine, TPU_V5E
 from .backends import GPUBackend, PallasBackend
-from .invariants import InvariantCache
+from .invariants import ENGINE_CACHE_VERSION, InvariantCache
 from .pool import TaskPool, guarded_call
 from .protocol import (
     EvalResult,
@@ -60,6 +64,66 @@ from .protocol import (
 # Items advanced per cell per refinement round: big enough to keep the pool
 # batched, small enough that the prune threshold tightens early.
 _ROUND_CHUNK = 16
+
+# Bump when the checkpoint record schema changes; stale-version cells are
+# ignored on load (re-priced), never migrated.
+_CKPT_VERSION = 1
+
+
+class SweepCheckpoint:
+    """Append-only journal of *completed* sweep cells (DESIGN.md §15).
+
+    Each record is one cell's final outcome — the ranked entries plus its
+    skip/prune records — keyed by a content digest of the cell's structural
+    identity (backend state, items, machine, ``top_k``, sweep mode).  A
+    cell commits with one fsync'd :class:`repro.durable.Journal` append the
+    moment it finishes, so a SIGKILL at any point loses at most the cell
+    that was mid-commit; ``Explorer(resume=path)`` replays the journal and
+    restores completed cells without re-pricing them.  Keys exclude the
+    workload *name* (a label): structurally identical cells priced under
+    different names restore from one record, exactly like live cell-sharing.
+    """
+
+    def __init__(self, path: str | os.PathLike):
+        self.path = os.fspath(path)
+        self._journal = durable.Journal(self.path)
+        self._cells: dict = {}
+        self.torn = False
+        with obs.span("durable.recover", cat="engine", path=self.path):
+            payloads, self.torn = self._journal.recover()
+            for raw in payloads:
+                try:
+                    rec = pickle.loads(raw)
+                except Exception:
+                    continue
+                if not (isinstance(rec, dict) and rec.get("kind") == "cell"
+                        and rec.get("version") == _CKPT_VERSION
+                        and rec.get("engine") == ENGINE_CACHE_VERSION):
+                    continue
+                self._cells[rec.get("key")] = rec
+
+    def __len__(self) -> int:
+        return len(self._cells)
+
+    def get(self, key: str | None):
+        return self._cells.get(key) if key else None
+
+    def put(self, key: str, record: dict) -> bool:
+        """Durably commit one completed cell; False when the record cannot
+        be pickled or the append fails (the sweep continues uncheckpointed
+        — durability is an accelerator, not a correctness dependency)."""
+        record = {"kind": "cell", "version": _CKPT_VERSION,
+                  "engine": ENGINE_CACHE_VERSION, "key": key, **record}
+        try:
+            raw = pickle.dumps(record, protocol=pickle.HIGHEST_PROTOCOL)
+        except Exception:
+            return False
+        try:
+            self._journal.append(raw)
+        except OSError:
+            return False
+        self._cells[key] = record
+        return True
 
 
 @dataclass
@@ -147,6 +211,28 @@ def _cell_signature(backend, items, machine):
         return None
 
 
+def _ckpt_key(run, top_k, machine_axis, strict) -> str | None:
+    """Content digest identifying one cell across processes, or None when
+    the cell is not checkpointable (unsignable state, or state the canonical
+    wire codec cannot encode).  Built on the serve-layer codec rather than
+    pickle: pickle bytes depend on object-graph sharing, the canonical JSON
+    encoding depends only on values — the property a cross-process resume
+    key needs.  ``top_k``/mode/strictness are part of the identity because
+    they change what a "completed cell" contains."""
+    sig = _cell_signature(run.backend, run.items, run.machine)
+    if sig is None:
+        return None
+    try:
+        from repro.serve.schema import encode
+
+        body = encode((ENGINE_CACHE_VERSION, _CKPT_VERSION, sig, top_k,
+                       bool(machine_axis), bool(strict)))
+        text = json.dumps(body, sort_keys=True, separators=(",", ":"))
+    except Exception:
+        return None
+    return hashlib.sha256(text.encode()).hexdigest()
+
+
 _AXIS_METHODS = ("geometry_key", "machine_axis_tasks", "batch_order",
                  "machine_axis_combine")
 
@@ -178,6 +264,8 @@ class _CellRun:
         self._times: list = []           # sorted primary times of results
         self.states: list = []           # _Item, bound order (prune mode)
         self._ranked: list | None = None
+        self.ckpt_key: str | None = None   # checkpoint identity (resume mode)
+        self.ckpt_done = False             # restored or already committed
 
     @property
     def threshold(self) -> float:
@@ -227,12 +315,19 @@ class Explorer:
                  cache_path: str | None = None, strict: bool = False,
                  cache_max_entries: int | None = None,
                  cache_max_bytes: int | None = None,
-                 trace_out: str | None = None):
+                 trace_out: str | None = None,
+                 resume: str | os.PathLike | None = None):
         self.parallel = parallel
         self.max_workers = max_workers
         self.trace_out = trace_out
         if trace_out:
             obs.enable()
+        # crash-consistent sweeps (DESIGN.md §15): completed cells journal
+        # to ``resume`` as they finish, and a later Explorer pointed at the
+        # same path restores them instead of re-pricing
+        self.resume_path = os.fspath(resume) if resume is not None else None
+        self._ckpt = (SweepCheckpoint(self.resume_path)
+                      if self.resume_path else None)
         if cache is not None and cache_path is not None:
             raise ValueError("pass either cache or cache_path, not both")
         if cache is not None and (cache_max_entries is not None
@@ -569,14 +664,30 @@ class Explorer:
             if progress and n:
                 progress(done_items, total_items)
 
+        # checkpoint restore (DESIGN.md §15): cells already completed by an
+        # earlier (possibly killed) process come back verbatim from the
+        # resume journal and skip every pricing stage below
+        live_runs = runs
+        stats["resumed_cells"] = 0
+        if self._ckpt is not None:
+            live_runs = []
+            for run in runs:
+                run.ckpt_key = _ckpt_key(run, top_k, machine_axis, strict)
+                rec = self._ckpt.get(run.ckpt_key)
+                if rec is not None and self._restore_run(run, rec):
+                    stats["resumed_cells"] += 1
+                    _advance(len(run.items))
+                else:
+                    live_runs.append(run)
+
         # machine-axis grouping (DESIGN.md §11): runs whose backend supports
         # batched evaluation and whose (backend state, items, machine
         # geometry) match become columns of one axis group; the rest flow
         # through the per-machine paths unchanged
-        axis_groups, scalar_runs = [], runs
+        axis_groups, scalar_runs = [], live_runs
         if machine_axis:
             scalar_runs, by_axis = [], {}
-            for run in runs:
+            for run in live_runs:
                 key = self._axis_key(run)
                 if key is None:
                     scalar_runs.append(run)
@@ -648,6 +759,7 @@ class Explorer:
             "engine.sweep.shared_cells": stats["shared_cells"],
             "engine.sweep.evaluated": sum(len(r.results) for r in runs),
             "engine.sweep.pruned": sum(len(r.pruned) for r in runs),
+            "engine.sweep.resumed_cells": stats["resumed_cells"],
         }
         for k in ("geometry_groups", "machines_batched", "geometry_share"):
             if k in stats:
@@ -727,6 +839,41 @@ class Explorer:
             run.wname, run.machine.name, _item_config(item),
             f"{type(err).__name__}: {err}"))
 
+    # ---- sweep checkpointing (DESIGN.md §15) ----------------------------
+    def _restore_run(self, run, rec) -> bool:
+        """Rebuild a completed cell from its checkpoint record.  Entries
+        are re-labelled with this sweep's workload name (the record may
+        have been written under a plan-prefixed or coalesced alias); a
+        record that fails to rebuild is ignored — the cell re-prices."""
+        try:
+            entries = [EvalResult(run.wname, e.machine, e.backend, e.index,
+                                  e.config, e.estimate, e.perf, e.limiter)
+                       for e in rec["entries"]]
+            skips = [SkippedConfig(run.wname, s.machine, s.config, s.reason)
+                     for s in rec["skips"]]
+            pruned = [PrunedConfig(run.wname, p.machine, p.config, p.bound,
+                                   p.threshold) for p in rec["pruned"]]
+        except Exception:
+            return False
+        run.results = list(entries)
+        run._ranked = entries
+        run.skips = skips
+        run.pruned = pruned
+        run.ckpt_done = True
+        return True
+
+    def _ckpt_store(self, run) -> None:
+        """Durably commit a just-completed cell to the resume journal."""
+        if self._ckpt is None or run.ckpt_key is None or run.ckpt_done:
+            return
+        run.ckpt_done = True
+        self._ckpt.put(run.ckpt_key, {
+            "wname": run.wname,
+            "entries": run.ranked_entries(),
+            "skips": run.skips,
+            "pruned": run.pruned,
+        })
+
     # ---- exhaustive path -----------------------------------------------
     def _run_exhaustive(self, runs, pool, strict, stats, advance) -> None:
         cell_tasks = []
@@ -749,6 +896,7 @@ class Explorer:
                 else:
                     self._combine(run, item, idx, values, strict)
                 advance(1)
+            self._ckpt_store(run)
 
     # ---- tiered bound-then-refine path ----------------------------------
     def _run_pruned(self, runs, pool, strict, stats, advance) -> None:
@@ -826,6 +974,14 @@ class Explorer:
                         st.tiers = [list(t) for t in
                                     run.backend.tiers(st.item, run.machine)]
                     round_work.append((run, st, st.tiers[st.tier]))
+            # checkpoint cells that reached completion since the last round
+            # (combines in the previous round, prunes in this pass) — the
+            # per-round granularity is what bounds loss under SIGKILL
+            if self._ckpt is not None:
+                for run in runs:
+                    if not run.ckpt_done and all(st.done
+                                                 for st in run.states):
+                        self._ckpt_store(run)
             if not round_work:
                 return rounds
             rounds += 1
@@ -933,6 +1089,7 @@ class Explorer:
                         config=config, estimate=est, perf=perf,
                         limiter=limiter))
                 advance(len(run.items))
+                self._ckpt_store(run)
 
 
 def _item_config(item):

@@ -26,6 +26,14 @@ becomes ``("err", PoisonTaskError(...))``, which the engine records as a
 skipped config (or raises under strict mode) — never a wrong number, never
 a hang.  ``TaskPool.health`` counts rebuilds/retries/hangs/quarantines for
 observability.
+
+Durability boundary (DESIGN.md §15): everything here is *in-memory*
+recovery within one sweep — workers hold no files and write no journals,
+so a SIGKILL of the parent process loses at most the in-flight chunks.
+Crash consistency across process death lives one layer up: the Explorer
+checkpoints each completed cell to its sweep journal, and a resumed run
+simply re-prices the cells whose tasks died with the pool.  Tasks are
+pure, so re-running them is bitwise invisible.
 """
 from __future__ import annotations
 

@@ -17,6 +17,13 @@ Sites (the taxonomy; §13 documents the recovery contract per site):
     ``serve.socket_drop``   daemon drops the client connection mid-response
     ``client.drop``         client abandons a request mid-flight (driven by
                             the chaos benches; no library-side hook needed)
+    ``proc.kill``           SIGKILL the current process *after* a journal
+                            frame commits (``repro.durable``) — ``at=(k,)``
+                            dies with exactly ``k + 1`` frames durable
+    ``io.torn_write``       a journal append writes only a prefix of its
+                            frame yet reports success (the lying
+                            filesystem); replay must recover the committed
+                            prefix and quarantine the tail
 
 Plans install via the API (:func:`install` / :func:`injected`) or the
 ``REPRO_FAULT_PLAN`` environment variable (JSON, see :func:`plan_from_env`)
@@ -53,6 +60,8 @@ SITES = frozenset({
     "invcache.load",
     "serve.socket_drop",
     "client.drop",
+    "proc.kill",
+    "io.torn_write",
 })
 
 
@@ -271,6 +280,17 @@ def crash_point(site: str) -> None:
         os._exit(int(spec.arg) or 13)
 
 
+def kill_point(site: str) -> None:
+    """Site that SIGKILLs the current process when it fires — the hard
+    death the durability layer must survive: no atexit hooks, no flushes,
+    no graceful drain.  (``crash_point`` is the softer ``os._exit``.)"""
+    spec = fire(site)
+    if spec is not None:
+        import signal
+
+        os.kill(os.getpid(), signal.SIGKILL)
+
+
 def hang_point(site: str) -> None:
     """Site that wedges the current thread for ``spec.arg`` seconds."""
     spec = fire(site)
@@ -298,8 +318,8 @@ def corrupt_bytes(site: str, data: bytes) -> bytes:
 __all__ = [
     "ENV_VAR", "SITES", "FaultSpec", "FaultPlan", "FaultInjector",
     "install", "clear", "active", "stats", "injected", "plan_from_env",
-    "ensure_env_plan", "fire", "crash_point", "hang_point", "drop_point",
-    "corrupt_bytes",
+    "ensure_env_plan", "fire", "crash_point", "kill_point", "hang_point",
+    "drop_point", "corrupt_bytes",
 ]
 
 # pool worker processes created by non-fork start methods import this module

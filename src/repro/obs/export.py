@@ -38,10 +38,15 @@ def chrome_trace(records=None) -> dict:
 
 
 def write_trace(path: str, records=None) -> str:
-    """Dump ``chrome_trace`` JSON to ``path``; returns the path."""
-    with open(path, "w") as f:
-        json.dump(chrome_trace(records), f)
-    return path
+    """Dump ``chrome_trace`` JSON to ``path``; returns the path.
+
+    Atomic (``durable.atomic_write``): a crash mid-export — e.g. the
+    daemon killed while flushing its trace on exit — leaves the previous
+    trace intact rather than a truncated JSON no viewer can open.
+    """
+    from repro import durable
+
+    return durable.atomic_write(path, json.dumps(chrome_trace(records)))
 
 
 def summary(records=None) -> str:

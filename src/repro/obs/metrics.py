@@ -227,6 +227,8 @@ for _name, _doc in {
     "engine.sweep.shared_cells": "cells cloned from a structural twin",
     "engine.sweep.evaluated": "configurations fully priced (pre-top-k)",
     "engine.sweep.pruned": "configurations eliminated by bounds alone",
+    "engine.sweep.resumed_cells": "cells restored from a sweep checkpoint "
+                                  "journal instead of being re-priced",
     "engine.sweep.degraded": "1 when this is a bound-only degraded ranking",
     "engine.axis.geometry_groups": "machine-axis structural geometry groups",
     "engine.axis.machines_batched": "machine columns batched across groups",

@@ -20,6 +20,13 @@ by their structural ``request_digest``, so a resubmission of work the
 daemon already finished (or still has in flight) resolves as a memo hit or
 in-flight join — never a duplicate sweep — and results already delivered
 to ``on_result`` are never delivered twice.
+
+The same retry budget rides daemon *restart windows* (DESIGN.md §15): a
+connection refused or reset while the daemon is down is just another
+retryable failure, so a client with ``retries > 0`` constructed against a
+dead socket — or mid-``price_many`` when the daemon is killed — reconnects
+with backoff and completes once the daemon is back (warm, via its memo
+journal).  Only with ``retries=0`` does construction require a live daemon.
 """
 from __future__ import annotations
 
@@ -70,7 +77,14 @@ class PriceClient:
         self._next_id = 0
         self._sock: socket.socket | None = None
         self._rfile = None
-        self._connect()
+        self._closed = False
+        # With a retry budget, a refused connect is deferred to the first
+        # op's retry loop — the daemon may be mid-restart right now.
+        try:
+            self._connect()
+        except OSError:
+            if self.retries <= 0:
+                raise
 
     # ---- connection lifecycle ------------------------------------------
     def _connect(self) -> None:
@@ -88,11 +102,14 @@ class PriceClient:
         self._sock, self._rfile = sock, rfile
 
     def _reconnect(self) -> None:
+        # an internal redial, not a user close — leave the client usable
         self.close()
+        self._closed = False
         self._connect()
 
     def close(self) -> None:
         """Idempotent: safe after a failed connect and safe to call twice."""
+        self._closed = True
         rfile, sock = self._rfile, self._sock
         self._rfile = self._sock = None
         try:
@@ -177,6 +194,8 @@ class PriceClient:
         sweeps submitted before it — and fires exactly once per request
         even across retries.
         """
+        if self._closed:
+            raise OSError("client is closed")
         requests = list(requests)
         out: list = [None] * len(requests)
         done = [False] * len(requests)
@@ -204,6 +223,8 @@ class PriceClient:
     def _attempt(self, requests, out, done, on_result, deadline_s) -> None:
         """One submission round over the current connection: send every
         still-unanswered request, then drain until each has an answer."""
+        if self._sock is None:      # deferred or dropped connect
+            self._connect()
         ids = {}
         for i, request in enumerate(requests):
             if done[i]:

@@ -34,18 +34,26 @@ disconnects mid-request has its outstanding submissions cancelled, so an
 abandoned cold sweep still queued never runs; and shutdown is honest — a
 serve or scheduler thread that fails to drain raises/exits nonzero instead
 of silently leaking.
+
+Durability (DESIGN.md §15): SIGTERM/SIGINT trigger the same graceful drain
+as the ``shutdown`` op — stop accepting, finish or cancel queued work,
+persist the invariant cache and a versioned scheduler-memo snapshot.
+``--resume`` replays both journals on boot (plus the sweep checkpoint
+journal at ``<cache-path>.sweeps``), so restarts are zero-warm-loss even
+after a SIGKILL; ``--pid-file`` lets supervisors target the process.
 """
 from __future__ import annotations
 
 import argparse
 import json
 import os
+import signal
 import socket
 import socketserver
 import sys
 import threading
 
-from repro import faults, obs
+from repro import durable, faults, obs
 from repro.core.engine import Explorer
 
 from .scheduler import QueueFullError, Scheduler
@@ -198,15 +206,19 @@ class PricingDaemon(socketserver.ThreadingUnixStreamServer):
             threading.Thread(target=self.shutdown, daemon=True).start()
 
     def close(self) -> bool:
-        """Stop serving, drain the scheduler, persist the cache.
+        """Stop serving, drain the scheduler, persist cache + memo.
 
-        Returns False when the scheduler worker failed to drain within
-        ``join_timeout_s`` (logged to stderr) — ``serve``/``main`` turn
-        that into a nonzero exit.
+        The graceful-drain path (DESIGN.md §15): stop accepting
+        connections, let the scheduler finish or cancel queued work, then
+        persist the invariant cache and the memo snapshot so the next boot
+        (``--resume``) starts warm.  Returns False when the scheduler
+        worker failed to drain within ``join_timeout_s`` (logged to
+        stderr) — ``serve``/``main`` turn that into a nonzero exit.
         """
-        self.server_close()
-        drained = self.scheduler.shutdown(wait=True,
-                                          timeout=self.join_timeout_s)
+        with obs.span("serve.drain", "serve"):
+            self.server_close()
+            drained = self.scheduler.shutdown(wait=True,
+                                              timeout=self.join_timeout_s)
         if not drained:
             print(f"repro.serve: scheduler worker still running after "
                   f"{self.join_timeout_s}s drain timeout; cache saved, "
@@ -242,13 +254,24 @@ class PricingDaemon(socketserver.ThreadingUnixStreamServer):
         return False
 
 
-def serve(socket_path: str, **daemon_kw) -> bool:
+def serve(socket_path: str, *, install_signals: bool = False,
+          **daemon_kw) -> bool:
     """Blocking entry point used by ``python -m repro.serve``.
 
+    With ``install_signals`` (only valid from the main thread), SIGTERM
+    and SIGINT trigger the same graceful drain as the ``shutdown`` op:
+    stop accepting, finish or cancel queued work, persist cache + memo
+    snapshot — so supervisors restarting the daemon lose no warmth.
     Returns True on a clean drain, False when shutdown left a wedged
     worker behind (``main`` exits nonzero so supervisors notice).
     """
     daemon = PricingDaemon(socket_path, **daemon_kw)
+    if install_signals:
+        def _drain(signum, frame):
+            daemon.request_shutdown()
+
+        signal.signal(signal.SIGTERM, _drain)
+        signal.signal(signal.SIGINT, _drain)
     try:
         daemon.serve_forever()
     except KeyboardInterrupt:
@@ -283,20 +306,53 @@ def main(argv=None) -> int:
                     help="collect telemetry spans and write a Chrome "
                          "trace-event JSON here on exit (live timelines "
                          "via the 'trace' op)")
+    ap.add_argument("--memo-path", default=None,
+                    help="journal the scheduler result memo here (default "
+                         "<cache-path>.memo when --resume is set): entries "
+                         "append as they memoize, so even a SIGKILL'd "
+                         "daemon restarts warm")
+    ap.add_argument("--resume", action="store_true",
+                    help="restore durable state on boot: replay the memo "
+                         "journal and the sweep checkpoint journal "
+                         "(<cache-path>.sweeps), so a restarted daemon "
+                         "answers memoized digests warm and never "
+                         "re-prices cells a killed sweep completed")
+    ap.add_argument("--pid-file", default=None,
+                    help="write the daemon pid here (atomic, removed on "
+                         "exit) so supervisors and the CI smoke job can "
+                         "target restarts")
     args = ap.parse_args(argv)
     if args.trace_out:
         obs.enable()
+    memo_path = args.memo_path
+    resume_path = None
+    if args.resume and args.cache_path:
+        memo_path = memo_path or args.cache_path + ".memo"
+        resume_path = args.cache_path + ".sweeps"
     engine = Explorer(parallel=args.parallel, max_workers=args.max_workers,
                       cache_path=args.cache_path,
                       cache_max_entries=args.cache_max_entries,
-                      cache_max_bytes=args.cache_max_bytes)
+                      cache_max_bytes=args.cache_max_bytes,
+                      resume=resume_path)
     scheduler = Scheduler(engine, memo_entries=args.memo_entries,
                           max_queue=args.max_queue,
-                          default_deadline_s=args.deadline_s)
+                          default_deadline_s=args.deadline_s,
+                          memo_path=memo_path, restore_memo=args.resume)
+    if args.pid_file:
+        durable.atomic_write(args.pid_file, f"{os.getpid()}\n")
     print(f"repro.serve: listening on {args.socket} "
           f"(cache: {args.cache_path or 'in-memory'}, "
-          f"{engine.cache.loaded_entries} entries warm)")
-    clean = serve(args.socket, scheduler=scheduler)
+          f"{engine.cache.loaded_entries} entries warm, "
+          f"{scheduler.memo_restored} memo entries restored)")
+    try:
+        clean = serve(args.socket, scheduler=scheduler,
+                      install_signals=True)
+    finally:
+        if args.pid_file:
+            try:
+                os.unlink(args.pid_file)
+            except OSError:
+                pass
     if args.trace_out and obs.spans():
         obs.write_trace(args.trace_out)
         print(f"repro.serve: trace written to {args.trace_out}")

@@ -32,7 +32,14 @@ Robustness (DESIGN.md §13):
     gets the exact sweep) and deadline requests never coalesce;
   * **cancellation** — ``cancel(fut)`` detaches a waiter whose client went
     away; a queued request all of whose waiters cancelled is dropped
-    before any engine work runs.
+    before any engine work runs;
+  * **durable memo** (DESIGN.md §15) — with ``memo_path`` set, every
+    memoized ``[digest, wire]`` pair appends to a versioned
+    :mod:`repro.durable` journal the moment it resolves, and
+    ``restore_memo=True`` replays it at boot (``memo_restored`` counter) —
+    so even a SIGKILL'd daemon restarts warm, losing at most the entry
+    that was mid-commit.  A graceful ``shutdown`` compacts the journal to
+    ``snapshot_memo()`` (header + live memo, atomically replaced).
 
 Counters make all of this observable (and gateable): ``requests =
 memo_hits + dedupe_joins + keys_priced + cancelled`` holds once the queue
@@ -50,12 +57,13 @@ from __future__ import annotations
 
 import dataclasses
 import json
+import os
 import threading
 import time
 from collections import OrderedDict
 from concurrent.futures import Future
 
-from repro import obs
+from repro import durable, obs
 from repro.api import PriceRequest, PriceResult, price, price_bounds
 from repro.obs.metrics import CounterGroup
 from repro.core.engine import (
@@ -66,7 +74,20 @@ from repro.core.engine import (
     SkippedConfig,
 )
 
-from .schema import encode, request_digest
+from .schema import SCHEMA_VERSION, dumps, encode, loads, request_digest
+
+# memo journal framing (DESIGN.md §15): frame 0 is this versioned header,
+# every later frame is one ``[digest, wire]`` pair appended the moment a
+# digest memoizes — so even a SIGKILL'd daemon loses at most the entry that
+# was mid-commit, and a ``--resume`` boot restores the warm memo verbatim
+_MEMO_KIND = "repro-memo-journal"
+_MEMO_VERSION = 1
+
+
+def _memo_header() -> bytes:
+    return json.dumps({"kind": _MEMO_KIND, "version": _MEMO_VERSION,
+                       "schema_version": SCHEMA_VERSION},
+                      separators=(",", ":")).encode()
 
 
 class QueueFullError(RuntimeError):
@@ -168,7 +189,9 @@ class Scheduler:
     def __init__(self, engine: Explorer | None = None, *,
                  memo_entries: int = 1024, coalesce: bool = True,
                  max_queue: int | None = None,
-                 default_deadline_s: float | None = None):
+                 default_deadline_s: float | None = None,
+                 memo_path: str | os.PathLike | None = None,
+                 restore_memo: bool = False):
         self.engine = engine or Explorer()
         self.memo_entries = memo_entries
         self.coalesce = coalesce
@@ -191,7 +214,27 @@ class Scheduler:
             "rejected": "submissions bounced by queue backpressure",
             "degraded": "requests answered with the bound-only ranking",
             "cancelled": "queued requests dropped before any pricing",
+            "memo_restored": "memo entries restored from the journal at "
+                             "boot (warm restarts)",
         })
+        # durable memo (DESIGN.md §15): entries journal as they memoize;
+        # boot with restore_memo=True replays them, then the journal is
+        # re-snapshotted so it holds exactly the live memo + header.  A
+        # non-restoring boot leaves the journal's warmth intact for a
+        # later --resume — it only truncates any torn tail so its own
+        # appends land on the committed prefix, not behind garbage.
+        self.memo_path = os.fspath(memo_path) if memo_path else None
+        self._memo_journal = (durable.Journal(self.memo_path)
+                              if self.memo_path else None)
+        self.memo_restored = 0
+        if self._memo_journal is not None:
+            if restore_memo:
+                self.memo_restored = self._restore_memo()
+                self.snapshot_memo()
+            else:
+                payloads, _ = self._memo_journal.recover()
+                if not payloads:        # fresh journal: header frame first
+                    self.snapshot_memo()
         self._worker = threading.Thread(target=self._run, name="repro-serve",
                                         daemon=True)
         self._worker.start()
@@ -286,6 +329,65 @@ class Scheduler:
                 memo.wire = wire
         return wire
 
+    # ---- durable memo (DESIGN.md §15) -----------------------------------
+    def _restore_memo(self) -> int:
+        """Replay the memo journal: header frame validated (kind, journal
+        version, wire schema version — any mismatch means a different
+        daemon wrote it, so restore nothing), then one memo entry per
+        committed frame, capped at ``memo_entries``.  Torn tails were
+        already truncated/quarantined by the journal recovery."""
+        with obs.span("durable.recover", cat="serve", path=self.memo_path):
+            payloads, _ = self._memo_journal.recover()
+            if not payloads:
+                return 0
+            try:
+                hdr = json.loads(payloads[0])
+                ok = (isinstance(hdr, dict)
+                      and hdr.get("kind") == _MEMO_KIND
+                      and hdr.get("version") == _MEMO_VERSION
+                      and hdr.get("schema_version") == SCHEMA_VERSION)
+            except Exception:
+                ok = False
+            if not ok:
+                return 0
+            restored = 0
+            for raw in payloads[1:]:
+                if len(self._memo) >= self.memo_entries:
+                    break
+                try:
+                    digest, wire = json.loads(raw)
+                    memo = _Memo(loads(wire))
+                    memo.wire = wire
+                except Exception:
+                    continue
+                self._memo[digest] = memo
+                restored += 1
+            self.counters["memo_restored"] += restored
+            return restored
+
+    def snapshot_memo(self) -> int:
+        """Atomically rewrite the memo journal as header + the live memo —
+        the versioned snapshot a graceful drain persists (also run at boot
+        so the journal never carries stale or foreign frames forward).
+        Returns the number of entries snapshotted."""
+        if self._memo_journal is None:
+            return 0
+        with self._lock:
+            items = list(self._memo.items())
+        entries = []
+        for digest, memo in items:
+            try:
+                wire = memo.wire or dumps(memo.result)
+                entries.append(json.dumps([digest, wire],
+                                          separators=(",", ":")).encode())
+            except Exception:
+                continue
+        try:
+            self._memo_journal.rewrite([_memo_header()] + entries)
+        except OSError:
+            return 0
+        return len(entries)
+
     def stats(self) -> dict:
         with self._lock:
             out = dict(self.counters)
@@ -315,6 +417,10 @@ class Scheduler:
             self._worker.join(timeout)
             drained = not self._worker.is_alive()
         self.engine.save_cache()
+        # an empty-memo drain that restored nothing has nothing to
+        # snapshot — rewriting would wipe warmth a later --resume wants
+        if self._memo or self.memo_restored:
+            self.snapshot_memo()
         return drained
 
     # ---- worker side ---------------------------------------------------
@@ -424,17 +530,37 @@ class Scheduler:
             self._resolve(p, PriceResult(report=report), None)
 
     def _resolve(self, pending, result, exc, memoize: bool = True):
+        # durable memo: render the wire text eagerly (outside the lock —
+        # it costs a serialization) so the journal frame and the lazily
+        # cached memo.wire are one and the same bytes
+        wire = None
+        if exc is None and memoize and self._memo_journal is not None:
+            try:
+                wire = dumps(result)
+            except Exception:
+                wire = None
         with self._lock:
             self._inflight.pop(pending.digest, None)
             self.counters["keys_priced"] += 1
             if exc is None:
                 if memoize:
-                    self._memo[pending.digest] = _Memo(result)
+                    memo = _Memo(result)
+                    memo.wire = wire
+                    self._memo[pending.digest] = memo
                     while len(self._memo) > self.memo_entries:
                         self._memo.popitem(last=False)
             else:
                 self.counters["errors"] += 1
             futures = list(pending.futures)
+        if wire is not None:
+            # the commit point for this digest's warm-restart durability;
+            # a failed append only costs warmth, never correctness
+            try:
+                self._memo_journal.append(
+                    json.dumps([pending.digest, wire],
+                               separators=(",", ":")).encode())
+            except OSError:
+                pass
         for fut in futures:
             if fut.cancelled():
                 continue

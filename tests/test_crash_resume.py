@@ -1,0 +1,293 @@
+"""Crash-consistency end to end (DESIGN.md §15).
+
+Three layers, one contract — a kill at any instant loses at most the
+record that was mid-commit, and a resumed process reproduces the exact
+answers it would have given without the kill:
+
+* ``repro.durable`` — the ``proc.kill`` fault site proves the journal's
+  commit point: a plan ``at=(k,)`` SIGKILLs the appender with exactly
+  ``k + 1`` frames durable.
+* ``Explorer(resume=...)`` — completed sweep cells journal incrementally;
+  a SIGKILL'd sweep resumed in a fresh process re-prices only the missing
+  cells and ranks bitwise-identically.
+* ``Scheduler``/daemon — the memo journal plus ``--resume`` make restarts
+  zero-warm-loss, and a ``PriceClient`` with retries rides the restart
+  window (including construction against a dead socket).
+"""
+import dataclasses
+import json
+import os
+import pickle
+import signal
+import subprocess
+import sys
+
+import pytest
+
+from repro import durable
+from repro.api import gpu_request, price
+from repro.core.access import LaunchConfig
+from repro.core.engine import Explorer
+from repro.core.machines import GPUMachine
+from repro.serve import PriceClient, Scheduler
+from repro.serve.daemon import can_bind_unix_sockets
+from repro.serve.schema import request_digest
+
+SMALL = GPUMachine(
+    name="A100/8", n_sms=13, clock_hz=1.41e9, l1_bytes=192 * 1024,
+    l2_bytes=20 * 1024 * 1024 // 8, dram_bw=1400e9 / 8, l2_bw=5000e9 / 8,
+    peak_flops_dp=9.7e12 / 8,
+)
+CONFIGS = [LaunchConfig(block=b) for b in [(64, 4, 2), (32, 4, 4), (8, 8, 8)]]
+
+needs_sockets = pytest.mark.skipif(
+    not can_bind_unix_sockets(os.environ.get("TMPDIR", "/tmp")),
+    reason="environment cannot bind Unix sockets")
+
+
+def _request(r=1, domain=(16, 24, 32)):
+    from repro.core.specs import star_stencil_3d
+
+    return gpu_request(star_stencil_3d(r=r, domain=domain), SMALL, CONFIGS)
+
+
+def _fingerprint(report):
+    return [(e.workload, e.machine, e.index, e.perf, e.limiter)
+            for e in report.entries]
+
+
+# ---- durable primitives ------------------------------------------------
+
+def test_atomic_write_is_all_or_nothing(tmp_path):
+    path = str(tmp_path / "state.json")
+    durable.atomic_write(path, b"old complete state")
+
+    real_replace = os.replace
+    calls = {"n": 0}
+
+    def failing_replace(src, dst):
+        calls["n"] += 1
+        raise OSError("injected crash before rename")
+
+    os.replace = failing_replace
+    try:
+        with pytest.raises(OSError):
+            durable.atomic_write(path, b"half-" * 1000)
+    finally:
+        os.replace = real_replace
+    assert calls["n"] == 1
+    assert open(path, "rb").read() == b"old complete state"
+    # the temp file was cleaned up, not leaked
+    assert os.listdir(tmp_path) == ["state.json"]
+
+
+def test_kill_point_commits_exact_frame_prefix(tmp_path):
+    """SIGKILL after the k-th append leaves exactly k+1 durable frames —
+    the commit point is the fsync inside ``append``, nothing buffered."""
+    jpath = str(tmp_path / "j.bin")
+    code = (
+        "import sys; sys.path.insert(0, %r)\n"
+        "from repro import durable, faults\n"
+        "faults.ensure_env_plan()\n"
+        "j = durable.Journal(%r)\n"
+        "for i in range(10):\n"
+        "    j.append(b'record-%%d' %% i)\n"
+    ) % (os.path.join(os.path.dirname(os.path.dirname(
+        os.path.abspath(__file__))), "src"), jpath)
+    for k in (0, 3, 7):
+        if os.path.exists(jpath):
+            os.unlink(jpath)
+        env = dict(os.environ, REPRO_FAULT_PLAN=json.dumps(
+            {"seed": 1, "faults": {"proc.kill": {"at": [k]}}}))
+        proc = subprocess.run([sys.executable, "-c", code], env=env,
+                              capture_output=True)
+        assert proc.returncode == -signal.SIGKILL, proc.stderr
+        payloads, torn = durable.Journal(jpath).recover()
+        assert not torn
+        assert payloads == [b"record-%d" % i for i in range(k + 1)]
+
+
+# ---- Explorer sweep checkpoint/resume ----------------------------------
+
+def test_sweep_resume_skips_priced_cells_and_ranks_identically(tmp_path):
+    ckpt = str(tmp_path / "sweeps.journal")
+    reqs = [_request(1), _request(2, (16, 16, 48))]
+
+    cold = Explorer(resume=ckpt)
+    baseline = [price(r, engine=cold) for r in reqs]
+    assert all(r.report.cache_stats["pool_tasks"] > 0 for r in baseline)
+
+    warm = Explorer(resume=ckpt)
+    resumed = [price(r, engine=warm) for r in reqs]
+    for r in resumed:
+        # nothing re-priced: the whole sweep came from the journal
+        assert r.report.cache_stats["pool_tasks"] == 0
+        assert r.report.cache_stats["bound_evals"] == 0
+        assert r.report.metrics["engine.sweep.resumed_cells"] >= 1
+    for a, b in zip(baseline, resumed):
+        assert _fingerprint(a.report) == _fingerprint(b.report)
+
+
+def test_sweep_resume_after_sigkill_matches_uninterrupted_run(tmp_path):
+    """Kill a multi-cell sweep at its first checkpoint commit; the
+    resumed process re-prices only the unfinished cells and the final
+    ranking is bitwise-identical to a never-killed reference."""
+    ckpt = str(tmp_path / "sweeps.journal")
+    out = str(tmp_path / "entries.pkl")
+    src = os.path.join(os.path.dirname(os.path.dirname(
+        os.path.abspath(__file__))), "src")
+    code = (
+        "import pickle, sys; sys.path.insert(0, %r)\n"
+        "from repro import faults\n"
+        "faults.ensure_env_plan()\n"
+        "import tests.test_crash_resume as t\n"
+        "from repro.api import price\n"
+        "from repro.core.engine import Explorer\n"
+        "eng = Explorer(resume=%r)\n"
+        "reqs = [t._request(1), t._request(2, (16, 16, 48))]\n"
+        "fps = [t._fingerprint(price(r, engine=eng).report) for r in reqs]\n"
+        "pickle.dump(fps, open(%r, 'wb'))\n"
+    ) % (src, ckpt, out)
+    root = os.path.dirname(src)
+    env = dict(os.environ, PYTHONPATH=os.pathsep.join([src, root]),
+               REPRO_FAULT_PLAN=json.dumps(
+                   {"seed": 1, "faults": {"proc.kill": {"at": [0]}}}))
+    proc = subprocess.run([sys.executable, "-c", code], env=env, cwd=root,
+                          capture_output=True)
+    assert proc.returncode == -signal.SIGKILL, proc.stderr
+    assert not os.path.exists(out)          # it really died mid-work
+    assert os.path.exists(ckpt)             # ...but a cell had committed
+
+    env.pop("REPRO_FAULT_PLAN")
+    proc = subprocess.run([sys.executable, "-c", code], env=env, cwd=root,
+                          capture_output=True)
+    assert proc.returncode == 0, proc.stderr
+    killed_then_resumed = pickle.load(open(out, "rb"))
+
+    reference = [
+        _fingerprint(price(r, engine=Explorer()).report)
+        for r in (_request(1), _request(2, (16, 16, 48)))]
+    assert killed_then_resumed == reference
+
+
+def test_checkpoint_key_excludes_labels_but_binds_structure(tmp_path):
+    """Same workload under a different name resumes (keys are structural);
+    a different top_k does not (it changes the answer)."""
+    ckpt = str(tmp_path / "sweeps.journal")
+    spec_req = _request(1)
+    price(spec_req, engine=Explorer(resume=ckpt))
+
+    relabeled = dataclasses.replace(
+        spec_req,
+        workloads=tuple(dataclasses.replace(w, name="renamed")
+                        for w in spec_req.workloads))
+    warm = Explorer(resume=ckpt)
+    res = price(relabeled, engine=warm)
+    assert res.report.metrics["engine.sweep.resumed_cells"] >= 1
+    assert res.report.cache_stats["pool_tasks"] == 0
+    assert all(e.workload == "renamed" for e in res.report.entries)
+
+    different = dataclasses.replace(spec_req, top_k=(spec_req.top_k or 3) + 1)
+    other = Explorer(resume=ckpt)
+    res2 = price(different, engine=other)
+    assert res2.report.metrics["engine.sweep.resumed_cells"] == 0
+
+
+# ---- scheduler memo journal --------------------------------------------
+
+def test_memo_journal_restores_warm_answers(tmp_path):
+    memo = str(tmp_path / "memo.journal")
+    req = _request(1)
+    digest = request_digest(req)
+
+    sched = Scheduler(Explorer(), memo_path=memo)
+    fut = sched.submit(req, digest)
+    wire = sched.encoded(digest, fut.result())
+    assert sched.shutdown(wait=True)
+    assert os.path.getsize(memo) > 0
+
+    # a restore-less boot ignores the journal; a restoring boot is warm
+    cold = Scheduler(Explorer(), memo_path=memo)
+    assert cold.memo_restored == 0
+    assert cold.shutdown(wait=True)
+
+    warm = Scheduler(Explorer(), memo_path=memo, restore_memo=True)
+    try:
+        assert warm.memo_restored == 1
+        fut2 = warm.submit(req, digest)
+        wire2 = warm.encoded(digest, fut2.result())
+        assert warm.counters["memo_hits"] == 1
+        assert wire2 == wire                # bitwise-identical wire answer
+    finally:
+        assert warm.shutdown(wait=True)
+
+
+def test_memo_journal_version_skew_restores_nothing(tmp_path):
+    memo = str(tmp_path / "memo.journal")
+    j = durable.Journal(memo)
+    j.append(json.dumps({"kind": "repro-memo-journal",
+                         "version": 999}).encode())
+    j.append(json.dumps(["digest", "wire"]).encode())
+    sched = Scheduler(Explorer(), memo_path=memo, restore_memo=True)
+    try:
+        assert sched.memo_restored == 0
+    finally:
+        assert sched.shutdown(wait=True)
+
+
+# ---- daemon restart window ---------------------------------------------
+
+@needs_sockets
+def test_client_with_retries_rides_a_daemon_restart(tmp_path):
+    """SIGKILL the daemon, construct a client against the dead socket,
+    restart with ``--resume``: the client completes with the memoized
+    (bitwise-identical) answer and the restarted daemon reports the
+    restored entries."""
+    import time
+
+    sock = str(tmp_path / "s.sock")
+    cache = str(tmp_path / "cache.inv")
+    pidfile = str(tmp_path / "pid")
+    src = os.path.join(os.path.dirname(os.path.dirname(
+        os.path.abspath(__file__))), "src")
+    env = dict(os.environ, PYTHONPATH=src)
+    cmd = [sys.executable, "-m", "repro.serve", "--socket", sock,
+           "--cache-path", cache, "--resume", "--pid-file", pidfile]
+
+    def boot():
+        proc = subprocess.Popen(cmd, env=env, stdout=subprocess.PIPE,
+                                stderr=subprocess.STDOUT, text=True)
+        for _ in range(400):
+            if os.path.exists(sock):
+                return proc
+            if proc.poll() is not None:
+                break
+            time.sleep(0.05)
+        raise RuntimeError("daemon never bound: " + proc.stdout.read())
+
+    req = _request(1)
+    first = boot()
+    try:
+        with PriceClient(sock, retries=0, timeout=60) as c:
+            baseline = _fingerprint(c.price(req).report)
+        assert int(open(pidfile).read()) == first.pid
+        os.kill(first.pid, signal.SIGKILL)
+        first.wait(timeout=30)
+
+        # constructed against a dead socket: deferred connect + retries
+        client = PriceClient(sock, retries=10, backoff_s=0.2, timeout=60)
+        second = boot()
+        try:
+            assert _fingerprint(client.price(req).report) == baseline
+            stats = client.stats()
+            assert stats["memo_restored"] >= 1
+            assert stats["memo_hits"] >= 1      # answered warm, no re-sweep
+            client.close()
+        finally:
+            os.kill(second.pid, signal.SIGTERM)     # graceful drain
+            assert second.wait(timeout=30) == 0
+        assert not os.path.exists(pidfile)
+    finally:
+        for proc in (first,):
+            if proc.poll() is None:
+                proc.kill()

@@ -1,15 +1,21 @@
-"""Self-healing invariant cache: damaged blobs, version skew, hold races.
+"""Self-healing invariant cache: damaged blobs, torn journals, hold races.
 
-Damage taxonomy (DESIGN.md §13): a truncated file, a flipped payload byte,
-and a foreign file must all load as *cold* (never wrong, never raising) and
-be quarantined to ``<path>.corrupt``; a version-mismatched blob is foreign
-but legitimate — counted, left in place, loaded cold.  After quarantine the
-next ``save`` rebuilds a clean file whose reload is bitwise-complete.
+Damage taxonomy (DESIGN.md §13, §15): a truncated file, a flipped payload
+byte, and a foreign file must all load as *cold* (never wrong, never
+raising) and be quarantined to ``<path>.corrupt``; a version-mismatched
+blob is foreign but legitimate — counted, left in place, loaded cold.
+After quarantine the next ``save`` rebuilds a clean file whose reload is
+bitwise-complete.  The append-only journal sidecar has its own contract:
+a cut or corruption at ANY byte offset must recover exactly the committed
+frame prefix (property-tested over every frame boundary plus random
+intra-frame offsets), truncate the file back to it, and quarantine the
+torn tail to ``<path>.tail``.
 """
 import pickle
+import random
 import threading
 
-from repro import faults
+from repro import durable, faults
 from repro.core.engine.invariants import (
     ENGINE_CACHE_VERSION,
     _MAGIC,
@@ -112,7 +118,7 @@ def test_injected_read_corruption_quarantines(tmp_path):
     clean = _reload(path)
     assert clean.loaded_entries == len(entries)
     assert clean.health == {"corrupt_quarantined": 0, "version_skew": 0,
-                            "load_errors": 0}
+                            "load_errors": 0, "journal_torn": 0}
 
 
 def test_unreadable_file_counts_load_error(tmp_path, monkeypatch):
@@ -188,6 +194,200 @@ def test_quarantine_survives_rename_failure(tmp_path, monkeypatch):
     cache = InvariantCache(path)
     assert cache.loaded_entries == 0
     assert cache.health["corrupt_quarantined"] == 1
+
+
+# ---- journal damage (DESIGN.md §15) -----------------------------------
+
+def test_incremental_saves_append_journal_segments(tmp_path):
+    """Each post-base save commits one journal segment holding only the
+    new entries; a reload replays base + every segment completely."""
+    path = str(tmp_path / "cache.inv")
+    entries = _populate(path, n=5)          # first save: compacted base
+    cache = _reload(path)
+    for gen in (1, 2):
+        fresh = {("gen", gen, i): ("ok", i + gen) for i in range(4)}
+        for key, outcome in fresh.items():
+            cache.store(key, outcome)
+        assert cache.save() == len(fresh)   # only the delta is written
+        entries.update(fresh)
+        assert cache.journal_segments == gen
+    again = _reload(path)
+    assert again.loaded_entries == len(entries)
+    assert again.journal_segments == 2
+    for key, outcome in entries.items():
+        assert again.peek(key) == outcome
+
+
+def test_journal_cut_at_every_offset_recovers_committed_prefix(tmp_path):
+    """The torn-write property: cut the journal at EVERY frame boundary
+    and at random intra-frame offsets — recovery must return exactly the
+    frames wholly below the cut, truncate back to them, and quarantine
+    the torn tail."""
+    jpath = str(tmp_path / "j.bin")
+    journal = durable.Journal(jpath)
+    payloads = [bytes([i]) * (7 + 11 * i) for i in range(6)]
+    boundaries = [0]
+    for p in payloads:
+        journal.append(p)
+        boundaries.append(boundaries[-1] + durable.FRAME_OVERHEAD + len(p))
+    raw = open(jpath, "rb").read()
+    assert len(raw) == boundaries[-1]
+
+    rng = random.Random(20260809)
+    cuts = set(boundaries) | {rng.randrange(len(raw)) for _ in range(40)}
+    for cut in sorted(cuts):
+        sub = str(tmp_path / f"cut{cut}.bin")
+        with open(sub, "wb") as f:
+            f.write(raw[:cut])
+        got, torn = durable.Journal(sub).recover()
+        committed = sum(1 for b in boundaries[1:] if b <= cut)
+        assert got == payloads[:committed], cut
+        assert torn == (cut not in boundaries), cut
+        # truncation is real: a second recovery sees a clean prefix
+        again, torn2 = durable.Journal(sub).recover()
+        assert again == payloads[:committed] and not torn2
+        if torn:
+            tail = open(sub + ".tail", "rb").read()
+            assert tail == raw[boundaries[committed]:cut]
+
+
+def test_journal_bitflip_ends_replay_at_flip(tmp_path):
+    """A flipped byte inside frame k fails its digest: replay keeps
+    frames < k, drops k and everything after (appends past rot are not
+    trusted), and quarantines from k onward."""
+    jpath = str(tmp_path / "j.bin")
+    journal = durable.Journal(jpath)
+    payloads = [b"frame-%d" % i * 5 for i in range(4)]
+    offs = [0]
+    for p in payloads:
+        journal.append(p)
+        offs.append(offs[-1] + durable.FRAME_OVERHEAD + len(p))
+    raw = bytearray(open(jpath, "rb").read())
+    raw[offs[2] + durable.FRAME_OVERHEAD + 3] ^= 0x01   # rot inside frame 2
+    with open(jpath, "wb") as f:
+        f.write(bytes(raw))
+    got, torn = durable.Journal(jpath).recover()
+    assert got == payloads[:2] and torn
+    assert open(jpath + ".tail", "rb").read() == bytes(raw[offs[2]:])
+
+
+def test_torn_journal_tail_loads_committed_prefix(tmp_path):
+    """Cache-level torn tail: a journal cut mid-segment loads base + the
+    committed segments, counts ``journal_torn``, quarantines the tail,
+    and the recovered cache keeps appending cleanly."""
+    path = str(tmp_path / "cache.inv")
+    entries = _populate(path, n=5)
+    cache = _reload(path)
+    seg1 = {("seg", 1, i): ("ok", i) for i in range(3)}
+    seg2 = {("seg", 2, i): ("ok", -i) for i in range(3)}
+    for seg in (seg1, seg2):
+        for key, outcome in seg.items():
+            cache.store(key, outcome)
+        cache.save()
+    jpath = path + ".journal"
+    raw = open(jpath, "rb").read()
+    sizes = [durable.FRAME_OVERHEAD + len(p) for p in durable.scan(jpath)[0]]
+    assert len(sizes) == 2
+    with open(jpath, "wb") as f:
+        f.write(raw[:sizes[0] + sizes[1] // 2])    # tear segment 2 mid-frame
+
+    torn = _reload(path)
+    assert torn.health["journal_torn"] == 1
+    assert torn.loaded_entries == len(entries) + len(seg1)
+    for key, outcome in seg1.items():
+        assert torn.peek(key) == outcome
+    assert all(torn.peek(k) is None for k in seg2)
+    assert (tmp_path / "cache.inv.journal.tail").exists()
+
+    # the truncated journal accepts further appends; the lost segment's
+    # entries can simply be re-priced and re-saved
+    for key, outcome in seg2.items():
+        torn.store(key, outcome)
+    torn.save()
+    healed = _reload(path)
+    assert healed.health["journal_torn"] == 0
+    assert healed.loaded_entries == len(entries) + len(seg1) + len(seg2)
+
+
+def test_torn_write_fault_site_loses_only_the_lying_segment(tmp_path):
+    """``io.torn_write`` models a filesystem that reports success on a
+    half-written frame: the next load detects the tear, keeps every
+    earlier commit, and never surfaces a partial segment."""
+    path = str(tmp_path / "cache.inv")
+    entries = _populate(path, n=4)
+    cache = _reload(path)
+    good = {("good", i): ("ok", i) for i in range(3)}
+    for key, outcome in good.items():
+        cache.store(key, outcome)
+    cache.save()
+    lied = {("lied", i): ("ok", i) for i in range(3)}
+    for key, outcome in lied.items():
+        cache.store(key, outcome)
+    with faults.injected(faults.FaultPlan(seed=3, faults={
+            "io.torn_write": faults.FaultSpec(at=(0,))})):
+        assert cache.save() == len(lied)    # the lie: save reports success
+
+    recovered = _reload(path)
+    assert recovered.health["journal_torn"] == 1
+    assert recovered.loaded_entries == len(entries) + len(good)
+    for key, outcome in good.items():
+        assert recovered.peek(key) == outcome
+    assert all(recovered.peek(k) is None for k in lied)
+
+
+def test_journal_compaction_folds_segments_into_base(tmp_path):
+    """Past ``_COMPACT_SEGMENTS`` the next save rewrites one atomic base
+    blob and deletes the journal — nothing lost, bounded recovery cost."""
+    path = str(tmp_path / "cache.inv")
+    entries = _populate(path, n=3)
+    cache = _reload(path)
+    cache._COMPACT_SEGMENTS = 2
+    for gen in range(4):
+        fresh = {("gen", gen, i): ("ok", i) for i in range(2)}
+        for key, outcome in fresh.items():
+            cache.store(key, outcome)
+        cache.save()
+        entries.update(fresh)
+    assert cache.compactions >= 1
+    assert cache.journal_segments <= 2
+    merged = _reload(path)
+    assert merged.loaded_entries == len(entries)
+    for key, outcome in entries.items():
+        assert merged.peek(key) == outcome
+
+
+def test_merge_folds_shards_and_compacts(tmp_path):
+    """The multi-host shard flow: N caches written against shard paths
+    (base + journal each) merge into one, and the next save lands the
+    union in a single compacted base blob."""
+    shard_paths = []
+    want = {}
+    for shard in range(3):
+        spath = str(tmp_path / f"cache.shard{shard}")
+        cache = InvariantCache(spath)
+        base = {("s", shard, i): ("ok", shard * 10 + i) for i in range(3)}
+        for key, outcome in base.items():
+            cache.store(key, outcome)
+        cache.save()
+        extra = {("s", shard, "x"): ("ok", shard)}
+        for key, outcome in extra.items():
+            cache.store(key, outcome)
+        cache.save()                        # shard journal has a segment
+        want.update(base)
+        want.update(extra)
+        shard_paths.append(spath)
+
+    main_path = str(tmp_path / "cache.inv")
+    main = InvariantCache(main_path)
+    main.store(("local", 0), ("ok", 0))
+    want[("local", 0)] = ("ok", 0)
+    assert main.merge(shard_paths) == len(want) - 1
+    main.save()
+    assert not (tmp_path / "cache.inv.journal").exists()   # compacted
+    merged = _reload(main_path)
+    assert merged.loaded_entries == len(want)
+    for key, outcome in want.items():
+        assert merged.peek(key) == outcome
 
 
 def test_err_outcomes_roundtrip_after_damage_rebuild(tmp_path):
